@@ -1,0 +1,40 @@
+"""Quickstart: the S2CE orchestrator on a drifting synthetic stream.
+
+Runs the full paper pipeline on CPU in ~30s: synthetic drifting stream ->
+edge preprocessing (normalize/sample/sketch) -> cloud online learning with
+DDM drift detection -> SLA-monitored offload decisions.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.orchestrator import Orchestrator, StreamJob
+from repro.streams.generators import DriftSpec, HyperplaneStream
+
+
+def main():
+    job = StreamJob("quickstart", dim=16, drift_detector="ddm",
+                    sample_rate=0.8)
+    orch = Orchestrator(job)
+
+    gen = HyperplaneStream(
+        dim=16, seed=0,
+        drift=DriftSpec(kind="abrupt", at=0.5, magnitude=2.0),
+        horizon=80 * 128.0)
+    batches = [gen.batch(i, 128) for i in range(80)]
+
+    print("running 80 batches (abrupt concept drift at batch 40)...")
+    m = orch.run(batches)
+
+    print(f"\nevents processed : {m.events}")
+    print(f"drift alarms     : {m.drift_alarms}")
+    print(f"plan changes     : {m.migrations}")
+    print(f"prequential      : {m.preq}")
+    print(f"sla              : {m.sla}")
+    print(f"decisions        : {m.decisions[:5]}")
+    assert m.preq["ewma_accuracy"] > 0.6, "model failed to recover from drift"
+    print("\nOK — drift detected and model recovered (ewma accuracy "
+          f"{m.preq['ewma_accuracy']:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Analytic three-term cost model shared by the placement optimizer, the
+offload controller, and the self-tuner (S2CE O1/O2 "smart resource
+management"). The same v5e constants ground the §Roofline report, so
+orchestrator decisions and the perf analysis speak one language.
+
+Resources are heterogeneous pools (cloud TPU pods, edge nodes); operators
+are stream-pipeline stages with per-event flops/bytes/output-bytes costs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+
+
+@dataclass(frozen=True)
+class Resource:
+    name: str
+    kind: str                  # "cloud" | "edge"
+    chips: int = 1
+    flops: float = PEAK_FLOPS  # per chip
+    mem_bw: float = HBM_BW
+    mem_cap: float = 16e9
+    net_bw: float = LINK_BW    # to the next hop (edge->cloud uplink for edge)
+    net_latency: float = 1e-3  # seconds per hop
+    energy_w: float = 200.0    # watts per chip (coarse; drives O2 decisions)
+
+    @property
+    def total_flops(self) -> float:
+        return self.chips * self.flops
+
+
+EDGE_NODE = Resource("edge", "edge", chips=1, flops=2e12, mem_bw=50e9,
+                     mem_cap=4e9, net_bw=1e9, net_latency=20e-3, energy_w=15.0)
+CLOUD_POD = Resource("cloud", "cloud", chips=256, flops=PEAK_FLOPS,
+                     mem_bw=HBM_BW, mem_cap=16e9, net_bw=LINK_BW,
+                     net_latency=0.2e-3, energy_w=250.0)
+
+
+@dataclass(frozen=True)
+class OperatorCost:
+    """Per-event costs of a pipeline stage."""
+    name: str
+    flops_per_event: float
+    bytes_per_event: float          # memory traffic
+    out_bytes_per_event: float      # bytes emitted downstream
+    state_bytes: float = 0.0        # resident state
+    edge_capable: bool = True       # some stages (full DL train) are not
+
+
+def stage_time(op: OperatorCost, res: Resource, rate: float) -> float:
+    """Seconds-per-second of stream time spent by `op` on `res` at `rate`
+    events/s (utilization; >1 means the stage cannot keep up)."""
+    t_compute = op.flops_per_event * rate / res.total_flops
+    t_memory = op.bytes_per_event * rate / (res.mem_bw * res.chips)
+    return max(t_compute, t_memory)
+
+
+def transfer_time(bytes_per_event: float, rate: float, res: Resource) -> float:
+    return bytes_per_event * rate / res.net_bw
+
+
+@dataclass
+class PipelinePlan:
+    """Assignment of each stage to a resource + derived metrics."""
+    assignment: Dict[str, str]            # op name -> resource name
+    utilization: Dict[str, float] = field(default_factory=dict)
+    latency_s: float = 0.0
+    uplink_utilization: float = 0.0
+    energy_w: float = 0.0
+    feasible: bool = True
+    notes: List[str] = field(default_factory=list)
+
+
+def evaluate_plan(ops: List[OperatorCost], assign: Dict[str, str],
+                  resources: Dict[str, Resource], rate: float) -> PipelinePlan:
+    """Evaluate a linear pipeline: stage order = list order; data crosses
+    the uplink wherever consecutive stages sit on different resources."""
+    plan = PipelinePlan(dict(assign))
+    latency = 0.0
+    energy = 0.0
+    uplink = 0.0
+    per_res_util: Dict[str, float] = {r: 0.0 for r in resources}
+    prev_res = None
+    in_bytes = ops[0].bytes_per_event if ops else 0.0
+    for op in ops:
+        res = resources[assign[op.name]]
+        if not op.edge_capable and res.kind == "edge":
+            plan.feasible = False
+            plan.notes.append(f"{op.name} not edge-capable")
+        u = stage_time(op, res, rate)
+        per_res_util[res.name] = per_res_util.get(res.name, 0.0) + u
+        latency += op.flops_per_event / res.total_flops
+        energy += u * res.energy_w * res.chips
+        if prev_res is not None and prev_res.name != res.name:
+            # hop between pools: uplink cost on the slower side
+            slow = prev_res if prev_res.net_bw < res.net_bw else res
+            uplink += transfer_time(in_bytes, rate, slow)
+            latency += slow.net_latency
+        in_bytes = op.out_bytes_per_event
+        prev_res = res
+        if op.state_bytes > res.mem_cap * res.chips:
+            plan.feasible = False
+            plan.notes.append(f"{op.name} state exceeds {res.name} memory")
+    plan.utilization = per_res_util
+    plan.latency_s = latency
+    plan.uplink_utilization = uplink
+    plan.energy_w = energy
+    for r, u in per_res_util.items():
+        if u > 1.0:
+            plan.feasible = False
+            plan.notes.append(f"{r} over capacity ({u:.2f})")
+    if uplink > 1.0:
+        plan.feasible = False
+        plan.notes.append(f"uplink over capacity ({uplink:.2f})")
+    return plan

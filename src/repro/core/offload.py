@@ -1,0 +1,71 @@
+"""Dynamic cloud<->edge workload shifting (S2CE O2, S3).
+
+A hysteresis controller re-plans operator placement when the observed
+event rate leaves the band the current plan was built for, or the SLA
+tracker reports violations. Replanning uses the same cost model as static
+placement; hysteresis (enter/exit thresholds + cooldown) prevents
+thrashing when the rate oscillates around a cut point.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.costmodel import OperatorCost, PipelinePlan, Resource
+from repro.core.placement import Objective, place
+from repro.core.sla import SLATracker
+
+
+@dataclass
+class OffloadDecision:
+    step: int
+    rate: float
+    cut: int                 # stages[:cut] on edge
+    reason: str
+    plan: PipelinePlan
+
+
+@dataclass
+class OffloadController:
+    ops: List[OperatorCost]
+    resources: Dict[str, Resource]
+    objective: Objective = field(default_factory=Objective)
+    headroom: float = 1.3      # replan when rate moves x1.3 outside band
+    cooldown: int = 5          # min decisions between migrations
+    planned_rate: float = 0.0
+    cut: int = 0
+    _last_change: int = -10**9
+    history: List[OffloadDecision] = field(default_factory=list)
+
+    def initial_plan(self, rate: float) -> OffloadDecision:
+        plan, cut = place(self.ops, self.resources, rate, self.objective)
+        self.planned_rate, self.cut = rate, cut
+        d = OffloadDecision(0, rate, cut, "initial", plan)
+        self.history.append(d)
+        return d
+
+    def observe(self, step: int, rate: float,
+                sla: Optional[SLATracker] = None) -> OffloadDecision:
+        """Called periodically with the measured ingest rate."""
+        out_of_band = (rate > self.planned_rate * self.headroom
+                       or rate < self.planned_rate / self.headroom)
+        sla_bad = sla is not None and not sla.ok()
+        if (not out_of_band and not sla_bad) or \
+                step - self._last_change < self.cooldown:
+            d = OffloadDecision(step, rate, self.cut, "hold",
+                                self.history[-1].plan)
+            return d
+        plan, cut = place(self.ops, self.resources, rate, self.objective)
+        reason = "sla" if sla_bad else (
+            "rate_up" if rate > self.planned_rate else "rate_down")
+        if cut != self.cut:
+            self._last_change = step
+        self.planned_rate, self.cut = rate, cut
+        d = OffloadDecision(step, rate, cut, reason, plan)
+        self.history.append(d)
+        return d
+
+    def migrations(self) -> int:
+        cuts = [d.cut for d in self.history]
+        return sum(1 for a, b in zip(cuts, cuts[1:]) if a != b)

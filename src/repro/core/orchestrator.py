@@ -1,0 +1,146 @@
+"""The S2CE orchestrator: one object that wires the paper's Fig. 2 together.
+
+A :class:`StreamJob` declares sources, the transformation pipeline, the ML
+payload (online learner and/or DL model), and an SLA. The orchestrator:
+
+  1. costs the pipeline stages and *places* them on cloud/edge pools
+     (core/placement),
+  2. runs the edge stage (preprocess/sample/sketch/pre-model) and the cloud
+     stage (drift-adaptive learning) over the stream,
+  3. monitors rate + SLA and *re-plans* via the offload controller,
+  4. reacts to drift alarms by adapting the learner (reset/LR bump),
+  5. exposes metrics for the Output Interface.
+
+The DL path (assigned architectures) reuses exactly the same train_step /
+serve substrate as the dry-run cells; here it runs reduced configs on CPU.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import CLOUD_POD, EDGE_NODE, Resource
+from repro.core.offload import OffloadController, OffloadDecision
+from repro.core.placement import Objective, standard_pipeline
+from repro.core.sla import SLA, SLATracker
+from repro.ml import metrics as mmetrics
+from repro.ml import online
+from repro.streams import drift as drift_mod
+from repro.streams import preprocess as prep
+from repro.streams import sampling as samp
+from repro.streams import sketches as sk
+from repro.streams.events import StreamBatch
+
+
+@dataclass
+class StreamJob:
+    name: str
+    dim: int = 16
+    n_classes: int = 2
+    sla: SLA = field(default_factory=SLA)
+    sample_rate: float = 0.5
+    drift_detector: str = "ddm"          # ddm|eddm|ph|adwin
+    edge_resource: Resource = EDGE_NODE
+    cloud_resource: Resource = CLOUD_POD
+    objective: Objective = field(default_factory=Objective)
+
+
+@dataclass
+class JobMetrics:
+    events: int = 0
+    drift_alarms: int = 0
+    migrations: int = 0
+    preq: Optional[dict] = None
+    sla: Optional[dict] = None
+    decisions: List[str] = field(default_factory=list)
+
+
+class Orchestrator:
+    """Runs a StreamJob over a stream of feature batches."""
+
+    def __init__(self, job: StreamJob):
+        self.job = job
+        self.resources = {job.edge_resource.name: job.edge_resource,
+                          job.cloud_resource.name: job.cloud_resource}
+        self.ops = standard_pipeline(job.dim, sample_rate=job.sample_rate)
+        self.controller = OffloadController(self.ops, self.resources,
+                                            job.objective)
+        self.sla = SLATracker(job.sla)
+
+        # edge state
+        self.norm = prep.norm_init(job.dim)
+        self.reservoir = samp.reservoir_init(256, job.dim)
+        self.moments = sk.moments_init(job.dim)
+        # cloud state
+        self.model = online.logreg_init(job.dim)
+        self.preq = mmetrics.preq_init()
+        det = {"ddm": (drift_mod.ddm_init, drift_mod.ddm_step),
+               "eddm": (drift_mod.eddm_init, drift_mod.eddm_step),
+               "ph": (drift_mod.ph_init, drift_mod.ph_step),
+               "adwin": (drift_mod.adwin_init, drift_mod.adwin_step)}[
+                   job.drift_detector]
+        self.det_state = det[0]()
+        self._det_step = jax.jit(det[1])
+        self.metrics = JobMetrics()
+        self._jit_edge = jax.jit(self._edge_stage)
+        self._jit_cloud = jax.jit(self._cloud_stage)
+
+    # -- stages (pure; placement decides WHERE they execute) ---------------
+    def _edge_stage(self, norm, reservoir, moments, x, y, rng, rate):
+        norm, xn = prep.norm_update_apply(norm, x)
+        moments = sk.moments_update(moments, xn)
+        reservoir = samp.reservoir_update(reservoir, xn, y)
+        mask, rng = samp.bernoulli_thin(rng, xn, rate)
+        return norm, reservoir, moments, xn, mask, rng
+
+    def _cloud_stage(self, model, preq, det_state, x, y, mask):
+        p = online.logreg_predict(model, x)
+        err_stream = (jnp.where(p > 0.5, 1, 0) != y).astype(jnp.float32)
+        # prequential: test THEN train (only on sampled rows, reweighted)
+        preq = mmetrics.preq_update(preq, p, y)
+        w = mask.astype(jnp.float32)
+        xw = x * w[:, None]
+        model = online.logreg_update(model, xw, y * mask, lr=0.5)
+        det_state, levels = jax.lax.scan(self._det_step, det_state, err_stream)
+        drifted = jnp.any(levels == drift_mod.DRIFT)
+        return model, preq, det_state, drifted
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, batches, rate_fn: Optional[Callable[[int], float]] = None,
+            seed: int = 0) -> JobMetrics:
+        rng = jax.random.PRNGKey(seed)
+        dec = self.controller.initial_plan(
+            rate_fn(0) if rate_fn else 1e4)
+        self.metrics.decisions.append(f"0:init cut={dec.cut}")
+        for step, batch in enumerate(batches):
+            t0 = time.perf_counter()
+            x = jnp.asarray(batch.data["x"])
+            y = jnp.asarray(batch.data["y"])
+            (self.norm, self.reservoir, self.moments, xn, mask, rng
+             ) = self._jit_edge(self.norm, self.reservoir, self.moments,
+                                x, y, rng, self.job.sample_rate)
+            (self.model, self.preq, self.det_state, drifted
+             ) = self._jit_cloud(self.model, self.preq, self.det_state,
+                                 xn, y, mask)
+            if bool(drifted):
+                self.metrics.drift_alarms += 1
+                self.model = online.logreg_reset_soft(self.model)
+            dt = time.perf_counter() - t0
+            rate = batch.n / max(dt, 1e-9)
+            self.sla.observe(dt, rate)
+            d = self.controller.observe(
+                step, rate_fn(step) if rate_fn else rate, self.sla)
+            if d.reason != "hold":
+                self.metrics.decisions.append(
+                    f"{step}:{d.reason} cut={d.cut}")
+            self.metrics.events += batch.n
+        self.metrics.migrations = self.controller.migrations()
+        self.metrics.preq = mmetrics.preq_metrics(self.preq)
+        self.metrics.sla = self.sla.report()
+        return self.metrics

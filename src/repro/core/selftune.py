@@ -1,0 +1,130 @@
+"""Self-tuning of distributed execution configs (S2CE O1: "Optimization &
+Self-Tuning of Cloud Applications").
+
+Given an (arch x shape), the tuner searches (recipe, microbatches, remat,
+attention chunk) candidates, scores each by dry-run compile + scan-aware
+roofline analysis (no hardware needed), and returns the best config under
+a memory cap. This module IS the engine behind the §Perf hillclimb: every
+EXPERIMENTS.md §Perf iteration is one tuner candidate with its
+hypothesis/measurement recorded.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import pathlib
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class Candidate:
+    overrides: Dict
+    recipe: Optional[str] = None
+    note: str = ""
+
+
+@dataclass
+class TuneResult:
+    candidate: Candidate
+    ok: bool
+    mem_gib: float = float("inf")
+    bound_s: float = float("inf")
+    dominant: str = ""
+    roofline_fraction: float = 0.0
+    useful_ratio: float = 0.0
+    error: str = ""
+    record: Optional[dict] = None
+
+    def better_than(self, other: "TuneResult", mem_cap_gib: float) -> bool:
+        if not self.ok:
+            return False
+        if not other.ok:
+            return True
+        a_fits = self.mem_gib <= mem_cap_gib
+        b_fits = other.mem_gib <= mem_cap_gib
+        if a_fits != b_fits:
+            return a_fits
+        if a_fits:
+            return self.bound_s < other.bound_s
+        return self.mem_gib < other.mem_gib
+
+
+def default_candidates(cfg) -> List[Candidate]:
+    """A modest, napkin-math-ordered candidate set (§Perf methodology:
+    biggest predicted win first)."""
+    cands = [Candidate({}, note="baseline")]
+    for mb in (1, 2, 4, 8, 16):
+        if mb != cfg.microbatches:
+            cands.append(Candidate({"microbatches": mb},
+                                   note=f"microbatches={mb}"))
+    for chunk in (256, 512, 2048):
+        if chunk != cfg.attn_chunk:
+            cands.append(Candidate({"attn_chunk": chunk},
+                                   note=f"attn_chunk={chunk}"))
+    for remat in ("dots",):
+        if remat != cfg.remat:
+            cands.append(Candidate({"remat": remat}, note=f"remat={remat}"))
+    return cands
+
+
+def evaluate_candidate(arch: str, shape_name: str, cand: Candidate, *,
+                       multi_pod: bool = False, tag: str = "tune",
+                       save: bool = False) -> TuneResult:
+    """Dry-run compile one candidate and extract the roofline verdict.
+
+    NOTE: must run in a process with 512 host devices (launch via
+    ``python -m repro.launch.tune`` or from dryrun-like entrypoints)."""
+    from repro.launch.dryrun import run_cell
+    rec = run_cell(arch, shape_name, multi_pod, recipe=cand.recipe,
+                   overrides=cand.overrides or None, tag=tag, save=save,
+                   force=True)
+    if not rec.get("ok"):
+        return TuneResult(cand, False, error=rec.get("error", "?"),
+                          record=rec)
+    rf = rec["roofline"]
+    return TuneResult(
+        cand, True,
+        mem_gib=rec["memory"]["total_per_device"] / 2**30,
+        bound_s=max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"]),
+        dominant=rf["dominant"],
+        roofline_fraction=rf["roofline_fraction"],
+        useful_ratio=rf["useful_flops_ratio"],
+        record=rec,
+    )
+
+
+def tune(arch: str, shape_name: str, candidates: List[Candidate], *,
+         mem_cap_gib: float = 16.0, log_path: Optional[str] = None,
+         stop_after_no_improve: int = 3) -> Tuple[TuneResult, List[TuneResult]]:
+    """Greedy sweep with early stop (3 consecutive <5% improvements)."""
+    results: List[TuneResult] = []
+    best: Optional[TuneResult] = None
+    stale = 0
+    for cand in candidates:
+        r = evaluate_candidate(arch, shape_name, cand)
+        results.append(r)
+        if best is None or r.better_than(best, mem_cap_gib):
+            improved = best is None or (
+                best.bound_s - r.bound_s) > 0.05 * best.bound_s or (
+                best.mem_gib > mem_cap_gib >= r.mem_gib)
+            best = r
+            stale = 0 if improved else stale + 1
+        else:
+            stale += 1
+        if log_path:
+            p = pathlib.Path(log_path)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            with p.open("a") as f:
+                f.write(json.dumps({
+                    "arch": arch, "shape": shape_name, "note": cand.note,
+                    "ok": r.ok, "mem_gib": round(r.mem_gib, 2),
+                    "bound_s": r.bound_s, "dominant": r.dominant,
+                    "roofline_fraction": r.roofline_fraction,
+                    "error": r.error[:200],
+                }) + "\n")
+        if stale >= stop_after_no_improve:
+            break
+    return best, results

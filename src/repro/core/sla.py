@@ -1,0 +1,56 @@
+"""SLA specification and tracking (S2CE S3: workload shift must not
+violate agreed SLAs)."""
+
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Deque, Dict, Optional
+
+
+@dataclass(frozen=True)
+class SLA:
+    max_latency_s: float = 0.5          # end-to-end event latency
+    min_throughput: float = 0.0         # events/s
+    max_staleness_s: float = 5.0        # model update staleness
+    max_error_rate: Optional[float] = None
+
+
+@dataclass
+class SLATracker:
+    sla: SLA
+    window: int = 100
+    latencies: Deque[float] = field(default_factory=lambda: collections.deque(maxlen=1000))
+    throughputs: Deque[float] = field(default_factory=lambda: collections.deque(maxlen=1000))
+    violations: int = 0
+    checks: int = 0
+
+    def observe(self, latency_s: float, throughput: float):
+        self.latencies.append(latency_s)
+        self.throughputs.append(throughput)
+        self.checks += 1
+        if (latency_s > self.sla.max_latency_s
+                or throughput < self.sla.min_throughput):
+            self.violations += 1
+
+    @property
+    def p99_latency(self) -> float:
+        if not self.latencies:
+            return 0.0
+        xs = sorted(self.latencies)
+        return xs[min(len(xs) - 1, int(0.99 * len(xs)))]
+
+    @property
+    def violation_rate(self) -> float:
+        return self.violations / max(self.checks, 1)
+
+    def ok(self) -> bool:
+        return self.violation_rate < 0.01
+
+    def report(self) -> Dict[str, float]:
+        import numpy as np
+        return {
+            "p99_latency_s": self.p99_latency,
+            "mean_throughput": float(np.mean(self.throughputs)) if self.throughputs else 0.0,
+            "violation_rate": self.violation_rate,
+        }

@@ -1,0 +1,85 @@
+"""Count-Min sketch update as a Pallas TPU kernel (S2CE ingest hot path).
+
+TPU has no atomic scatter-add, so per-depth histogram accumulation is done
+the MXU way: hash each item id to a column, build a one-hot (block, width)
+matrix, and matmul with a ones-vector — i.e. a column-count reduction per
+block, accumulated across the item grid in VMEM scratch. The sketch row
+for each hash depth is updated independently (grid dim 0).
+
+Hashing: universal (a*x + b) mod p mod width, with per-depth odd constants
+(same family as the jnp oracle in ref.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_P = 2_147_483_647  # Mersenne prime 2^31-1
+
+
+def hash_ids(ids: jax.Array, a: jax.Array, b: jax.Array, width: int):
+    """Universal hash; seeds must be < 2^15 so products stay exact in the
+    int32 domain (jax x64 is disabled in production configs)."""
+    h = (ids.astype(jnp.int32) * a.astype(jnp.int32) + b.astype(jnp.int32))
+    return ((h % _P) % width).astype(jnp.int32)
+
+
+def _cms_kernel(ids_ref, a_ref, b_ref, out_ref, acc_scr, *,
+                blocks: int, block: int, width: int, n: int):
+    bi = pl.program_id(1)
+
+    @pl.when(bi == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ids = ids_ref[0].astype(jnp.int32)                 # (block,)
+    a = a_ref[0]
+    b = b_ref[0]
+    hi = ((ids.astype(jnp.int32) * a.astype(jnp.int32)
+           + b.astype(jnp.int32)) % _P) % width        # (block,)
+    valid = (bi * block + jax.lax.iota(jnp.int32, block)) < n
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block, width), 1)
+    onehot = jnp.where(
+        jnp.logical_and(cols == hi.astype(jnp.int32)[:, None],
+                        valid[:, None]),
+        1.0, 0.0)
+    counts = jnp.sum(onehot, axis=0)                   # (width,)
+    acc_scr[...] = acc_scr[...] + counts
+
+    @pl.when(bi == blocks - 1)
+    def _final():
+        out_ref[0] = acc_scr[...].astype(out_ref.dtype)
+
+
+def countmin_update(ids: jax.Array, depth: int, width: int,
+                    seeds: jax.Array, *, block: int = 1024,
+                    interpret: bool = False) -> jax.Array:
+    """ids: (n,) int32 -> sketch increment (depth, width) int32.
+    seeds: (depth, 2) int64-ish hash constants."""
+    n = ids.shape[0]
+    block = min(block, max(n, 8))
+    npad = -(-n // block) * block
+    if npad != n:
+        ids = jnp.pad(ids, (0, npad - n))
+    blocks = npad // block
+    kernel = functools.partial(_cms_kernel, blocks=blocks, block=block,
+                               width=width, n=n)
+    out = pl.pallas_call(
+        kernel,
+        grid=(depth, blocks),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda d, b: (0, b)),
+            pl.BlockSpec((1,), lambda d, b: (d,)),
+            pl.BlockSpec((1,), lambda d, b: (d,)),
+        ],
+        out_specs=pl.BlockSpec((1, width), lambda d, b: (d, 0)),
+        out_shape=jax.ShapeDtypeStruct((depth, width), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((width,), jnp.float32)],
+        interpret=interpret,
+    )(ids[None, :], seeds[:, 0], seeds[:, 1])
+    return out

@@ -1,0 +1,128 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Grid: (batch*heads, q_blocks, kv_blocks) with the kv dimension innermost
+("arbitrary" semantics) so the online-softmax accumulators live in VMEM
+scratch across kv steps. Causal blocks above the diagonal are skipped with
+``pl.when`` — the 2x compute saving the XLA chunked path cannot express
+(see EXPERIMENTS.md §Perf).
+
+Block shapes are MXU-aligned (multiples of 128 whenever the sequence
+allows; the head dim rides whole). VMEM working set per grid point:
+q (bq,D) + k,v (bk,D) + acc (bq,D) fp32 + scores (bq,bk) — ~1.3 MB at
+bq=bk=256, D=128, far under the v5e VMEM budget, leaving room for double
+buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                      causal: bool, scale: float, bq: int, bk: int,
+                      kv_blocks: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # causal: skip blocks fully above the diagonal
+    run = (k_start <= q_start + bq - 1) if causal else (ki >= 0)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, bq: int = 256,
+                         bk: int = 256, interpret: bool = False):
+    """q: (BH, S, D); k,v: (BH, T, D). Returns (BH, S, D)."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    bq = min(bq, S)
+    bk = min(bk, T)
+    Sp, Tp = -(-S // bq) * bq, -(-T // bk) * bk
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0)))
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0)))
+    kv_blocks = Tp // bk
+    kernel = functools.partial(
+        _flash_fwd_kernel, causal=causal, scale=1.0 / math.sqrt(D),
+        bq=bq, bk=bk, kv_blocks=kv_blocks, kv_len=T)
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, Sp // bq, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S, :]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 256,
+                    bk: int = 256, interpret: bool = False):
+    """Model-layout wrapper. q: (B,S,H,D); k,v: (B,T,KV,D) (GQA expanded
+    here). Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+    o = flash_attention_bhsd(qr, kr, vr, causal=causal, bq=bq, bk=bk,
+                             interpret=interpret)
+    return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)

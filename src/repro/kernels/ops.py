@@ -1,0 +1,66 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Kernel dispatch policy: the Pallas path is taken on TPU backends (or when
+``REPRO_FORCE_PALLAS_INTERPRET=1`` forces interpret mode, used by tests and
+CPU benchmarks); otherwise callers fall back to the XLA chunked
+implementations. This keeps one model code path across dev CPU and
+production TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import countmin as _cms
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba_scan as _ms
+from repro.kernels import rwkv6_wkv as _wkv
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS_INTERPRET", "0") == "1"
+
+
+def pallas_available() -> bool:
+    return jax.default_backend() == "tpu" or _interpret()
+
+
+def flash_supported(q, k, v, causal, q_offset, kv_len) -> bool:
+    """Kernel handles plain causal/full attention without offsets/lengths
+    (the cached-decode path uses the XLA implementation)."""
+    if not pallas_available():
+        return False
+    if kv_len is not None:
+        return False
+    if isinstance(q_offset, jax.Array) or q_offset:
+        return False
+    return q.shape[-1] == k.shape[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 256,
+                    bk: int = 256):
+    return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_wkv(r, k, v, lw, u, h0, *, chunk: int = 32):
+    return _wkv.rwkv6_wkv(r, k, v, lw, u, h0, chunk=chunk,
+                          interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bd"))
+def mamba_scan(dt, x, Bm, Cm, A, h0, *, chunk: int = 128, bd: int = 256):
+    return _ms.mamba_scan_bd(dt, x, Bm, Cm, A, h0, chunk=chunk, bd=bd,
+                             interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "width", "block"))
+def countmin_update(ids, *, depth: int, width: int, seeds, block: int = 1024):
+    return _cms.countmin_update(ids, depth, width, seeds, block=block,
+                                interpret=_interpret())

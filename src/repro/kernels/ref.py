@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are swept against in tests/test_kernels.py)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,S,H,D); k,v: (B,T,KV,D). Materialized-softmax oracle."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def rwkv6_wkv_ref(r, k, v, lw, u, h0):
+    """Naive per-timestep recurrence. r,k,v,lw: (B,S,H,hs); u: (H,hs);
+    h0: (B,H,hs,hs). Returns (o, h_last) in fp32."""
+    B, S, H, hs = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(lw.astype(jnp.float32))          # decay in (0,1]
+
+    def step(h, t):
+        rt, kt, vt, wt = rf[:, t], kf[:, t], vf[:, t], w[:, t]
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        o_t = jnp.einsum("bhi,bhij->bhj", rt, h + u[None, :, :, None] * kv)
+        h = wt[..., None] * h + kv
+        return h, o_t
+
+    h, outs = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(S))
+    return jnp.moveaxis(outs, 0, 1), h            # (B,S,H,hs), (B,H,hs,hs)
+
+
+def mamba_scan_ref(dt, x, Bm, Cm, A, h0):
+    """Naive per-timestep selective scan. dt,x: (B,S,dI); Bm,Cm: (B,S,N);
+    A: (dI,N); h0: (B,dI,N). Returns (y (B,S,dI), h_last)."""
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(dtf[:, t][:, :, None] * Af[None])
+        b = (dtf[:, t] * xf[:, t])[:, :, None] * Bf[:, t][:, None, :]
+        h = a * h + b
+        y = jnp.einsum("bdn,bn->bd", h, Cf[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(dt.shape[1]))
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def countmin_ref(ids, depth, width, seeds):
+    """Scatter-add oracle for the Count-Min sketch increment."""
+    P = 2_147_483_647
+    out = jnp.zeros((depth, width), jnp.int32)
+    for d in range(depth):
+        h = ((ids.astype(jnp.int32) * int(seeds[d, 0])
+              + int(seeds[d, 1])) % P) % width
+        out = out.at[d].add(
+            jnp.zeros((width,), jnp.int32).at[h].add(1))
+    return out

@@ -1,0 +1,115 @@
+"""Training launcher: builds the mesh, shards params/optimizer per the
+arch's recipe, and runs the streaming train loop with async checkpointing
+and drift-adaptive control.
+
+On this CPU container it runs reduced configs (``--smoke``); on a pod the
+same entrypoint runs the full config (remove --smoke, point JAX at the
+TPU runtime). The step function is identical to the dry-run cells.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 50 --batch 8 --seq 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import tempfile
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor", "lion", "sgd"])
+    ap.add_argument("--recipe", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--data-mesh", type=int, default=1)
+    ap.add_argument("--model-mesh", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.dist import checkpoint as ckpt
+    from repro.dist import use_mesh
+    from repro.dist.sharding import build_rules
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import model_zoo as zoo
+    from repro.streams.generators import DriftSpec, TokenStream
+    from repro.train.optim import make_optimizer
+    from repro.train.train_step import make_train_step
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.recipe:
+        cfg = cfg.with_overrides(recipe=args.recipe)
+    if args.microbatches:
+        cfg = cfg.with_overrides(microbatches=args.microbatches)
+
+    n_dev = args.data_mesh * args.model_mesh
+    mesh = make_local_mesh(args.data_mesh, args.model_mesh) if n_dev > 1 else None
+    rules = build_rules(cfg) if mesh is not None else None
+
+    print(f"arch={cfg.name} params={zoo.param_count(cfg)/1e6:.1f}M "
+          f"recipe={cfg.recipe} mesh={n_dev} devices")
+
+    gen = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      drift=DriftSpec("abrupt", at=0.5),
+                      horizon=float(args.steps * args.batch * args.seq))
+    opt = make_optimizer(cfg, args.optimizer, lr=args.lr,
+                         total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+
+    ckpt_dir = pathlib.Path(args.ckpt_dir or tempfile.mkdtemp(prefix="s2ce_"))
+    saver = ckpt.AsyncCheckpointer(ckpt_dir)
+    params = zoo.init_params(cfg, 0)
+    state = opt.init(params)
+    step = jnp.asarray(0)
+    start = 0
+    if args.resume and ckpt.latest_step(ckpt_dir) is not None:
+        tree, meta = ckpt.restore(ckpt_dir, {"params": params, "opt": state})
+        params, state, start = tree["params"], tree["opt"], meta["step"]
+        step = jnp.asarray(start)
+        print(f"resumed from step {start}")
+
+    import contextlib
+    ctx = use_mesh(mesh, rules) if mesh is not None else contextlib.nullcontext()
+    t0 = time.perf_counter()
+    with ctx:
+        for i in range(start, args.steps):
+            batch = {"tokens": jnp.asarray(
+                gen.batch(i, args.batch).data["tokens"])}
+            if cfg.family == "vlm":
+                batch["patches"] = jnp.zeros(
+                    (args.batch, cfg.frontend_len, cfg.frontend_dim),
+                    jnp.float32)
+            if cfg.family == "encdec":
+                batch["frames"] = jnp.zeros(
+                    (args.batch, args.seq, cfg.frontend_dim), jnp.float32)
+            params, state, step, metrics = step_fn(params, state, step, batch)
+            if (i + 1) % args.ckpt_every == 0:
+                saver.save(int(step), {"params": params, "opt": state})
+            if i % 10 == 0:
+                print(f"step {i:4d} loss={float(metrics['loss']):7.3f} "
+                      f"gnorm={float(metrics['grad_norm']):6.2f}")
+    saver.wait()
+    dt = time.perf_counter() - t0
+    toks = (args.steps - start) * args.batch * args.seq
+    print(f"done: {toks/dt:.0f} tok/s; checkpoints at {ckpt_dir} "
+          f"(latest {ckpt.latest_step(ckpt_dir)})")
+
+
+if __name__ == "__main__":
+    main()

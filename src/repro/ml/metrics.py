@@ -1,0 +1,42 @@
+"""Prequential (test-then-train) evaluation for streaming models (§2.4)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PrequentialState(NamedTuple):
+    n: jax.Array
+    correct: jax.Array
+    loss_sum: jax.Array
+    ewma_acc: jax.Array   # fading-factor accuracy (tracks drift recovery)
+
+
+def preq_init() -> PrequentialState:
+    return PrequentialState(jnp.zeros(()), jnp.zeros(()), jnp.zeros(()),
+                            jnp.asarray(0.5))
+
+
+def preq_update(st: PrequentialState, p: jax.Array, y: jax.Array,
+                fading: float = 0.995) -> PrequentialState:
+    """p: (n,) predicted probability of class 1; y: (n,) labels."""
+    yhat = (p > 0.5).astype(jnp.int32)
+    acc_b = jnp.mean((yhat == y).astype(jnp.float32))
+    ll = -jnp.mean(y * jnp.log(p + 1e-9) + (1 - y) * jnp.log(1 - p + 1e-9))
+    n = st.n + p.shape[0]
+    correct = st.correct + acc_b * p.shape[0]
+    decay = fading ** p.shape[0]
+    ewma = decay * st.ewma_acc + (1 - decay) * acc_b
+    return PrequentialState(n, correct, st.loss_sum + ll * p.shape[0], ewma)
+
+
+def preq_metrics(st: PrequentialState) -> dict:
+    return {
+        "accuracy": float(st.correct / jnp.maximum(st.n, 1.0)),
+        "logloss": float(st.loss_sum / jnp.maximum(st.n, 1.0)),
+        "ewma_accuracy": float(st.ewma_acc),
+        "n": int(st.n),
+    }

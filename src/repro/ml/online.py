@@ -1,0 +1,126 @@
+"""Streaming (non-DL) learners — the S2CE ML library layer (§2.4, §5.5).
+
+All learners are (state, batch) -> state pure functions with a `predict`;
+they run identically on edge (pre-models) and cloud, are jit-compiled, and
+their per-update latency is the S2 "microsecond updates" benchmark.
+
+  * online logistic regression (SGD / AdaGrad), drift-resettable
+  * streaming k-means (MacQueen / mini-batch)
+  * half-space-trees-style anomaly scorer (random projection histograms)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Online logistic regression
+# ---------------------------------------------------------------------------
+
+class LogRegState(NamedTuple):
+    w: jax.Array          # (d,)
+    b: jax.Array
+    g2: jax.Array         # AdaGrad accumulator
+    n: jax.Array
+
+
+def logreg_init(dim: int) -> LogRegState:
+    return LogRegState(jnp.zeros((dim,)), jnp.zeros(()),
+                       jnp.full((dim,), 1e-8), jnp.zeros(()))
+
+
+def logreg_predict(state: LogRegState, x: jax.Array) -> jax.Array:
+    return jax.nn.sigmoid(x @ state.w + state.b)
+
+
+def logreg_update(state: LogRegState, x: jax.Array, y: jax.Array,
+                  lr: float = 0.5, l2: float = 1e-4) -> LogRegState:
+    """One AdaGrad step on a batch. x: (n,d); y: (n,) in {0,1}."""
+    p = logreg_predict(state, x)
+    err = p - y.astype(jnp.float32)
+    gw = x.T @ err / x.shape[0] + l2 * state.w
+    gb = err.mean()
+    g2 = state.g2 + jnp.square(gw)
+    w = state.w - lr * gw * jax.lax.rsqrt(g2)
+    b = state.b - lr * gb
+    return LogRegState(w, b, g2, state.n + x.shape[0])
+
+
+def logreg_reset_soft(state: LogRegState, keep: float = 0.5) -> LogRegState:
+    """Drift response: shrink weights toward zero, reset curvature."""
+    return LogRegState(state.w * keep, state.b * keep,
+                       jnp.full_like(state.g2, 1e-8), jnp.zeros(()))
+
+
+# ---------------------------------------------------------------------------
+# Streaming k-means
+# ---------------------------------------------------------------------------
+
+class KMeansState(NamedTuple):
+    centers: jax.Array    # (k, d)
+    counts: jax.Array     # (k,)
+
+
+def kmeans_init(k: int, dim: int, seed: int = 0) -> KMeansState:
+    c = jax.random.normal(jax.random.PRNGKey(seed), (k, dim))
+    return KMeansState(c, jnp.ones((k,)))
+
+
+def kmeans_assign(state: KMeansState, x: jax.Array) -> jax.Array:
+    d2 = jnp.sum(jnp.square(x[:, None, :] - state.centers[None]), -1)
+    return jnp.argmin(d2, axis=-1)
+
+
+def kmeans_update(state: KMeansState, x: jax.Array) -> KMeansState:
+    a = kmeans_assign(state, x)
+    k = state.centers.shape[0]
+    one = jax.nn.one_hot(a, k, dtype=x.dtype)            # (n, k)
+    batch_counts = one.sum(0)
+    batch_sums = one.T @ x
+    counts = state.counts + batch_counts
+    centers = state.centers + (batch_sums - batch_counts[:, None]
+                               * state.centers) / jnp.maximum(counts, 1.0)[:, None]
+    return KMeansState(centers, counts)
+
+
+# ---------------------------------------------------------------------------
+# Anomaly scoring via random-projection histograms (HS-trees flavour)
+# ---------------------------------------------------------------------------
+
+class AnomalyState(NamedTuple):
+    proj: jax.Array       # (d, m) random projections
+    edges: jax.Array      # (m, bins+1) histogram edges
+    counts: jax.Array     # (m, bins)
+    n: jax.Array
+
+
+def anomaly_init(dim: int, m: int = 8, bins: int = 32, span: float = 4.0,
+                 seed: int = 0) -> AnomalyState:
+    proj = jax.random.normal(jax.random.PRNGKey(seed), (dim, m)) / jnp.sqrt(dim)
+    edges = jnp.linspace(-span, span, bins + 1)
+    return AnomalyState(proj, jnp.tile(edges[None], (m, 1)),
+                        jnp.ones((m, bins)), jnp.zeros(()))
+
+
+def anomaly_update(state: AnomalyState, x: jax.Array) -> AnomalyState:
+    z = x @ state.proj                                    # (n, m)
+    bins = state.counts.shape[1]
+    idx = jnp.clip(jnp.searchsorted(state.edges[0], z) - 1, 0, bins - 1)
+    one = jax.nn.one_hot(idx, bins, dtype=jnp.float32)    # (n, m, bins)
+    return state._replace(counts=state.counts + one.sum(0),
+                          n=state.n + x.shape[0])
+
+
+def anomaly_score(state: AnomalyState, x: jax.Array) -> jax.Array:
+    """Mean negative log-frequency across projections; higher = more anomalous."""
+    z = x @ state.proj
+    bins = state.counts.shape[1]
+    idx = jnp.clip(jnp.searchsorted(state.edges[0], z) - 1, 0, bins - 1)
+    freq = jnp.take_along_axis(
+        state.counts[None], idx.swapaxes(0, 1)[..., None].swapaxes(0, 1), axis=2
+    )[..., 0] / jnp.maximum(state.counts.sum(-1), 1.0)[None]
+    return -jnp.log(freq + 1e-9).mean(-1)

@@ -1,0 +1,293 @@
+"""Public model API: build/init any assigned architecture, run train /
+prefill / decode, and produce ShapeDtypeStruct input specs for dry-runs.
+
+Cache layout mirrors the layer plan: ``{"prefix": [slot_cache...],
+"stack": stacked_slot_caches}`` (+ ``"memory"`` for enc-dec / VLM).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import attention as attn_mod
+from repro.models import params as pmod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.layers import apply_norm, dtype_of, embed_tokens, lm_logits, sincos_pos_embed
+from repro.models.transformer import (
+    Slot, forward_lm, layer_plan, lm_loss, model_specs, run_prefix, run_stack,
+)
+
+__all__ = [
+    "model_specs", "init_params", "param_axes", "param_shapes", "forward_lm",
+    "lm_loss", "init_caches", "prefill", "decode_step", "input_specs",
+]
+
+
+def init_params(cfg: ArchConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    return pmod.materialize(model_specs(cfg), key, dtype_of(cfg.param_dtype))
+
+
+def param_axes(cfg: ArchConfig):
+    return pmod.axes_of(model_specs(cfg))
+
+
+def param_shapes(cfg: ArchConfig):
+    return pmod.shape_tree(model_specs(cfg), dtype_of(cfg.param_dtype))
+
+
+def param_count(cfg: ArchConfig) -> int:
+    return pmod.param_count(model_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _slot_cache(cfg: ArchConfig, slot: Slot, batch: int, max_len: int,
+                src_len: int, dtype):
+    if slot.mixer == "attn":
+        return {"kv": attn_mod.init_kv_cache(cfg, batch, max_len, dtype)}
+    if slot.mixer == "mla":
+        return {"kv": attn_mod.init_mla_cache(cfg, batch, max_len, dtype)}
+    if slot.mixer == "cross":
+        return {"cross": attn_mod.CrossCache(
+            k=jnp.zeros((batch, src_len, cfg.n_kv_heads, cfg.d_head), dtype),
+            v=jnp.zeros((batch, src_len, cfg.n_kv_heads, cfg.d_head), dtype))}
+    if slot.mixer == "attn_cross":
+        return {"kv": attn_mod.init_kv_cache(cfg, batch, max_len, dtype),
+                "cross": attn_mod.CrossCache(
+                    k=jnp.zeros((batch, src_len, cfg.n_kv_heads, cfg.d_head), dtype),
+                    v=jnp.zeros((batch, src_len, cfg.n_kv_heads, cfg.d_head), dtype))}
+    if slot.mixer == "mamba":
+        return {"mamba": ssm_mod.init_mamba_state(cfg, batch)}
+    if slot.mixer == "rwkv":
+        return {"rwkv": rwkv_mod.init_rwkv_state(cfg, batch)}
+    raise ValueError(slot.mixer)
+
+
+def _stack_cache(cfg, pattern, rep, batch, max_len, src_len, dtype):
+    per_slot = [_slot_cache(cfg, s, batch, max_len, src_len, dtype)
+                for s in pattern]
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (rep,) + x.shape).copy(), per_slot)
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                src_len: int = 0, dtype=None):
+    dtype = dtype or dtype_of(cfg.kv_cache_dtype)
+    if cfg.family == "encdec":
+        pre, rep, pat = layer_plan(cfg, cfg.dec_layers, decoder=True)
+    else:
+        pre, rep, pat = layer_plan(cfg, cfg.n_layers)
+    out = {
+        "prefix": [_slot_cache(cfg, s, batch, max_len, src_len, dtype) for s in pre],
+        "stack": _stack_cache(cfg, pat, rep, batch, max_len, src_len, dtype) if rep else [],
+    }
+    if cfg.family in ("encdec", "vlm"):
+        out["memory"] = jnp.zeros(
+            (batch, src_len, cfg.d_model), dtype_of(cfg.compute_dtype))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cached forward (prefill and decode share this)
+# ---------------------------------------------------------------------------
+
+def _encode(params, cfg: ArchConfig, batch: dict, impl: str):
+    mem_in = tfm.frontend_memory(params, cfg, batch)
+    Se = mem_in.shape[1]
+    x = mem_in + sincos_pos_embed(Se, cfg.d_model).astype(mem_in.dtype)[None]
+    pre, rep, pat = layer_plan(cfg, cfg.enc_layers, decoder=False)
+    pos = tfm._positions(x.shape[0], Se)
+    x, _, _ = run_prefix(params["enc"]["prefix"], cfg, pre, x, positions=pos,
+                         memory=None, caches=None, impl=impl)
+    if rep:
+        x, _, _ = run_stack(params["enc"]["stack"], cfg, pat, x, positions=pos,
+                            memory=None, caches=None, impl=impl,
+                            stack_axes=tfm.stack_axes_for(cfg, "enc/stack"))
+    return apply_norm(params["enc"]["final_norm"], cfg, x)
+
+
+def forward_cached(params, cfg: ArchConfig, tokens, caches, *, offset,
+                   memory=None, impl: str = "chunked"):
+    """tokens: (B,S) starting at absolute position `offset` (scalar)."""
+    B, S = tokens.shape
+    x = embed_tokens(params["embed"], cfg, tokens)
+    if cfg.pos_embed == "sincos":
+        x = x + _sincos_at(cfg, S, offset).astype(x.dtype)[None]
+    positions = tfm._positions(B, S, offset)
+    if cfg.family == "encdec":
+        pre, rep, pat = layer_plan(cfg, cfg.dec_layers, decoder=True)
+        prefix_params, stack_params = params["dec"]["prefix"], params["dec"]["stack"]
+    else:
+        pre, rep, pat = layer_plan(cfg, cfg.n_layers)
+        prefix_params, stack_params = params["prefix"], params["stack"]
+    new = dict(caches)
+    x, pc, _ = run_prefix(prefix_params, cfg, pre, x, positions=positions,
+                          memory=memory, caches=caches["prefix"], impl=impl)
+    new["prefix"] = pc
+    if rep:
+        which = "dec/stack" if cfg.family == "encdec" else "stack"
+        x, sc, _ = run_stack(stack_params, cfg, pat, x, positions=positions,
+                             memory=memory,
+                             caches=caches["stack"] if caches["stack"] != [] else None,
+                             impl=impl, stack_axes=tfm.stack_axes_for(cfg, which))
+        new["stack"] = sc
+    x = apply_norm(params["final_norm"], cfg, x)
+    return lm_logits(params["embed"], cfg, x[:, -1:, :]), new
+
+
+def _sincos_at(cfg, S, offset):
+    pos = (jnp.arange(S) + offset).astype(jnp.float32)[:, None]
+    d = cfg.d_model
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((S, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def constrain_caches(caches):
+    """Apply logical-axis sharding constraints to a cache tree (no-op
+    without an active mesh)."""
+    from repro.dist import shard
+    axes = cache_axes(caches)
+    return jax.tree.map(lambda x, ax: shard(x, *ax), caches, axes)
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, max_len: int,
+            impl: str = "chunked"):
+    """Fill caches from a prompt. Returns (last-token logits, caches)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    memory = None
+    src_len = 0
+    if cfg.family == "encdec":
+        memory = _encode(params, cfg, batch, impl)
+        src_len = memory.shape[1]
+    elif cfg.family == "vlm":
+        memory = tfm.frontend_memory(params, cfg, batch)
+        src_len = memory.shape[1]
+    caches = constrain_caches(init_caches(cfg, B, max_len, src_len))
+    # cross caches start empty -> computed from memory on first pass
+    caches = _clear_cross(caches)
+    logits, caches = forward_cached(params, cfg, tokens, caches, offset=0,
+                                    memory=memory, impl=impl)
+    if memory is not None:
+        caches["memory"] = memory
+    return logits, caches
+
+
+def _clear_cross(caches):
+    def clear(tree):
+        if isinstance(tree, dict):
+            return {k: (None if k == "cross" else clear(v)) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [clear(v) for v in tree]
+        return tree
+    return clear(caches)
+
+
+def decode_step(params, cfg: ArchConfig, caches, tokens, *,
+                impl: str = "chunked"):
+    """One decode step. tokens: (B,1). Offset derives from cache lengths."""
+    offset = _cache_length(caches)
+    memory = caches.get("memory")
+    return forward_cached(params, cfg, tokens, caches, offset=offset,
+                          memory=memory, impl=impl)
+
+
+def _cache_length(caches) -> jax.Array:
+    leaves = []
+
+    def visit(t):
+        if isinstance(t, dict):
+            [visit(v) for v in t.values()]
+        elif isinstance(t, list):
+            [visit(v) for v in t]
+        elif isinstance(t, (attn_mod.KVCache, attn_mod.MLACache)):
+            leaves.append(t.length)
+    visit({k: v for k, v in caches.items() if k != "memory"})
+    if not leaves:
+        return jnp.zeros((), jnp.int32)
+    l0 = leaves[0]
+    return l0.reshape(-1)[0] if l0.ndim else l0
+
+
+_CACHE_FIELD_AXES = {
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "c_kv": ("batch", "kv_seq", None),
+    "k_rope": ("batch", "kv_seq", None),
+    "length": (),
+    "conv": ("batch", None, "dinner"),
+    "h": ("batch", "dinner", None),
+    "tm_shift": ("batch", None),
+    "cm_shift": ("batch", None),
+    "wkv": ("batch", "heads", None, None),
+    "memory": ("batch", None, None),
+}
+
+
+def cache_axes(caches):
+    """Logical-axes tree mirroring a cache pytree (for dry-run shardings)."""
+    def leaf(path, x):
+        name = None
+        for p in reversed(path):
+            n = getattr(p, "name", None)
+            if n is None:
+                kk = getattr(p, "key", None)
+                n = kk if isinstance(kk, str) else None
+            if n in _CACHE_FIELD_AXES:
+                name = n
+                break
+        base = _CACHE_FIELD_AXES[name]
+        rank = len(x.shape)
+        if rank == len(base) + 1:
+            base = ("layers",) + base
+        assert rank == len(base), f"cache leaf {path}: rank {rank} vs {base}"
+        return base
+    return jax.tree_util.tree_map_with_path(leaf, caches)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """Global-shape inputs for a (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = dtype_of(cfg.compute_dtype)
+    tok = jax.ShapeDtypeStruct((B, S), i32)
+
+    if shape.kind == "train":
+        out = {"tokens": tok}
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.frontend_dim), f)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), f)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": tok}
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.frontend_dim), f)
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), f)
+        return out
+    # decode: one new token against caches of length S
+    out = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    src_len = cfg.frontend_len if cfg.family in ("encdec", "vlm") else 0
+    out["caches"] = jax.eval_shape(
+        lambda: init_caches(cfg, B, S, src_len))   # no allocation
+    return out

@@ -1,0 +1,96 @@
+"""Parameter specs: declare once, materialize or reflect.
+
+A model defines a pytree of :class:`Spec` leaves (shape + logical axes +
+initializer). The same tree yields:
+  * real parameters          (:func:`materialize`)
+  * shape stand-ins          (:func:`shape_tree`, for .lower() dry-runs)
+  * logical-axes tree        (:func:`axes_of`, consumed by dist.sharding)
+"""
+
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal|zeros|ones|constant|uniform
+    scale: Optional[float] = None  # stddev for normal (default: fan-in)
+    const: float = 0.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"spec rank mismatch: {self.shape} vs {self.axes}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    if len(shape) == 0:
+        return 1
+    if len(shape) == 1:
+        return shape[0]
+    # convention: last dim is output; everything else is fan-in
+    n = 1
+    for s in shape[:-1]:
+        n *= s
+    return max(n, 1)
+
+
+def _init_leaf(spec: Spec, key, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "constant":
+        return jnp.full(spec.shape, spec.const, dtype)
+    if spec.init == "uniform":
+        s = spec.scale if spec.scale is not None else 1.0 / np.sqrt(_fan_in(spec.shape))
+        return jax.random.uniform(key, spec.shape, dtype, -s, s)
+    if spec.init == "normal":
+        s = spec.scale if spec.scale is not None else 1.0 / np.sqrt(_fan_in(spec.shape))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * s).astype(dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def materialize(tree, key, dtype=jnp.float32):
+    """Materialize a Spec tree into parameters (deterministic per path)."""
+    def leaf(path, spec):
+        sub = jax.random.fold_in(key, zlib.crc32(_path_str(path).encode()))
+        return _init_leaf(spec, sub, dtype)
+    return jax.tree_util.tree_map_with_path(leaf, tree, is_leaf=is_spec)
+
+
+def shape_tree(tree, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), tree, is_leaf=is_spec)
+
+
+def axes_of(tree):
+    return jax.tree.map(lambda s: s.axes, tree, is_leaf=is_spec)
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(
+        tree, is_leaf=is_spec) if isinstance(s, Spec))
+
+
+def stack_specs(spec_tree, n: int, axis_name: Optional[str] = "layers"):
+    """Prepend a stacked `layers` dim of size n to every Spec in the tree."""
+    def leaf(s: Spec) -> Spec:
+        return Spec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale, s.const)
+    return jax.tree.map(leaf, spec_tree, is_leaf=is_spec)

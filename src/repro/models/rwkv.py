@@ -1,0 +1,184 @@
+"""RWKV6 ("Finch") mixer: data-dependent decay WKV recurrence + channel mix.
+
+Chunked evaluation: within a chunk the pairwise decay exponent
+L_excl[t] - L_incl[s] (s < t) is always <= 0, so the intra-chunk part is
+computed in a numerically safe pairwise form (no exp overflow, unlike the
+factored q'k' form); inter-chunk contributions flow through the per-head
+state S (hs_k x hs_v). The Pallas kernel (:mod:`repro.kernels.rwkv6_wkv`)
+tiles the same math into VMEM.
+
+Decode state per layer: (tm_shift (B,D), cm_shift (B,D), wkv (B,H,hk,hv)).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist import shard
+from repro.models.layers import groupnorm_heads
+from repro.models.params import Spec
+
+
+class RWKVState(NamedTuple):
+    tm_shift: jax.Array   # (B, D) last input to time-mix
+    cm_shift: jax.Array   # (B, D) last input to channel-mix
+    wkv: jax.Array        # (B, H, hs, hs) fp32
+
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def rwkv_time_mix_specs(cfg: ArchConfig):
+    c = cfg.rwkv
+    d, H, hs = cfg.d_model, cfg.n_heads, c.head_size
+    return {
+        "mu_x": Spec((d,), ("embed",), "zeros"),
+        "mu": Spec((5, d), (None, "embed"), "zeros"),
+        "mix_w1": Spec((d, 5 * c.mix_lora), ("embed", "lora"), scale=0.02),
+        "mix_w2": Spec((5, c.mix_lora, d), (None, "lora", "embed"), scale=0.02),
+        "w0": Spec((d,), ("embed",), "constant", const=-2.0),
+        "dec_w1": Spec((d, c.decay_lora), ("embed", "lora"), scale=0.02),
+        "dec_w2": Spec((c.decay_lora, d), ("lora", "embed"), scale=0.02),
+        "u": Spec((H, hs), ("heads", None), scale=0.5),
+        "wr": Spec((d, d), ("embed", "dinner")),
+        "wk": Spec((d, d), ("embed", "dinner")),
+        "wv": Spec((d, d), ("embed", "dinner")),
+        "wg": Spec((d, d), ("embed", "dinner")),
+        "wo": Spec((d, d), ("dinner", "embed")),
+        "lnx_scale": Spec((d,), ("embed",), "ones"),
+        "lnx_bias": Spec((d,), ("embed",), "zeros"),
+    }
+
+
+def rwkv_channel_mix_specs(cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": Spec((d,), ("embed",), "zeros"),
+        "mu_r": Spec((d,), ("embed",), "zeros"),
+        "wk": Spec((d, f), ("embed", "ff")),
+        "wv": Spec((f, d), ("ff", "embed")),
+        "wr": Spec((d, d), ("embed", "dinner")),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """xx[t] = x[t-1]; xx[0] = prev (or 0). x:(B,S,D), prev:(B,D)."""
+    first = (prev if prev is not None
+             else jnp.zeros((x.shape[0], x.shape[2]), x.dtype))[:, None, :]
+    return jnp.concatenate([first.astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+def wkv_chunked(r, k, v, lw, u, h0, chunk: int):
+    """RWKV6 WKV, chunked. r,k,v: (B,S,H,hs); lw: (B,S,H,hs) log-decay (<=0);
+    u: (H,hs); h0: (B,H,hs,hs) fp32. Returns (out (B,S,H,hs), h_last)."""
+    B, S, H, hs = r.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    lwf = lw.astype(jnp.float32)
+
+    def body(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, 1)
+        rc, kc, vc, lc = sl(rf), sl(kf), sl(vf), sl(lwf)
+        L = jnp.cumsum(lc, axis=1)                    # inclusive (B,Lc,H,hs)
+        L_excl = L - lc
+        # inter-chunk: o_t += (r_t * exp(L_excl_t)) @ h
+        q_in = rc * jnp.exp(L_excl)
+        o = jnp.einsum("blhi,bhij->blhj", q_in, h)
+        # intra-chunk (pairwise-stable): exponent L_excl[t]-L[s] <= 0 for s<t
+        dpair = jnp.exp(jnp.minimum(L_excl[:, :, None] - L[:, None], 0.0))
+        # (B,t,s,H,hs)
+        scores = jnp.einsum("blhi,blshi,bshi->blsh", rc, dpair, kc)
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+        scores = scores * tri[None, :, :, None]
+        o = o + jnp.einsum("blsh,bshj->blhj", scores, vc)
+        # diagonal bonus: (r_t . (u*k_t)) v_t
+        diag = jnp.einsum("blhi,hi,blhi->blh", rc, u.astype(jnp.float32), kc)
+        o = o + diag[..., None] * vc
+        # state update: h' = exp(L_end)*h + sum_s exp(L_end - L_s) k_s v_s^T
+        L_end = L[:, -1]                              # (B,H,hs)
+        kdec = kc * jnp.exp(L_end[:, None] - L)
+        h_new = jnp.exp(L_end)[..., None] * h + jnp.einsum(
+            "bshi,bshj->bhij", kdec, vc)
+        return h_new, o
+
+    body = jax.checkpoint(body)   # nested remat: see ssm.py chunk_body note
+    if n == 1:
+        h_last, out = body(h0, 0)
+    else:
+        h_last, outs = jax.lax.scan(body, h0, jnp.arange(n))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hs)
+    return out.astype(r.dtype), h_last
+
+
+def rwkv_time_mix(p, cfg: ArchConfig, x: jax.Array,
+                  state: Optional[RWKVState] = None,
+                  impl: str = "chunked"
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out, new_tm_shift, new_wkv_state)."""
+    c = cfg.rwkv
+    B, S, D = x.shape
+    H, hs = cfg.n_heads, c.head_size
+
+    xx = _token_shift(x, state.tm_shift if state else None)
+    dx = xx - x
+    xxx = x + dx * p["mu_x"].astype(x.dtype)
+    lo = jnp.tanh(xxx @ p["mix_w1"].astype(x.dtype))
+    lo = lo.reshape(B, S, 5, c.mix_lora)
+    deltas = jnp.einsum("bsrm,rmd->bsrd", lo, p["mix_w2"].astype(x.dtype))
+    mixed = {name: x + dx * (p["mu"][i].astype(x.dtype) + deltas[:, :, i])
+             for i, name in enumerate(_MIX_NAMES)}
+
+    r = (mixed["r"] @ p["wr"].astype(x.dtype)).reshape(B, S, H, hs)
+    k = (mixed["k"] @ p["wk"].astype(x.dtype)).reshape(B, S, H, hs)
+    v = (mixed["v"] @ p["wv"].astype(x.dtype)).reshape(B, S, H, hs)
+    g = jax.nn.silu(mixed["g"] @ p["wg"].astype(x.dtype))
+    r = shard(r, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+
+    dec = jnp.tanh(mixed["w"] @ p["dec_w1"].astype(x.dtype)) @ p["dec_w2"].astype(x.dtype)
+    lw = -jnp.exp((p["w0"].astype(jnp.float32) + dec.astype(jnp.float32)))
+    lw = lw.reshape(B, S, H, hs)                       # log decay, < 0
+
+    h0 = state.wkv if state is not None else jnp.zeros((B, H, hs, hs), jnp.float32)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        o, h_last = kops.rwkv6_wkv(r, k, v, lw, p["u"], h0, chunk=c.chunk)
+    else:
+        o, h_last = wkv_chunked(r, k, v, lw, p["u"], h0, c.chunk)
+
+    o = groupnorm_heads(p["lnx_scale"], p["lnx_bias"], o.reshape(B, S, D),
+                        H, cfg.norm_eps)
+    o = o * g
+    out = o @ p["wo"].astype(x.dtype)
+    return out, x[:, -1, :], h_last
+
+
+def rwkv_channel_mix(p, cfg: ArchConfig, x: jax.Array,
+                     state: Optional[RWKVState] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    xx = _token_shift(x, state.cm_shift if state else None)
+    dx = xx - x
+    xk = x + dx * p["mu_k"].astype(x.dtype)
+    xr = x + dx * p["mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    kk = shard(kk, "batch", None, "ff")
+    vv = kk @ p["wv"].astype(x.dtype)
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * vv
+    return out, x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int) -> RWKVState:
+    H, hs = cfg.n_heads, cfg.rwkv.head_size
+    return RWKVState(
+        tm_shift=jnp.zeros((batch, cfg.d_model), jnp.float32),
+        cm_shift=jnp.zeros((batch, cfg.d_model), jnp.float32),
+        wkv=jnp.zeros((batch, H, hs, hs), jnp.float32),
+    )

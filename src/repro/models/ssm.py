@@ -1,0 +1,155 @@
+"""Mamba (S6) selective-state-space mixer, chunked for TPU.
+
+The selective scan h_t = a_t * h_{t-1} + b_t is evaluated chunk-by-chunk
+(sequential lax.scan over chunks, parallel associative scan within a chunk)
+so the (B, Lc, d_inner, N) working set stays bounded — the same shape the
+Pallas kernel (:mod:`repro.kernels.mamba_scan`) tiles into VMEM.
+
+State for decoding: (conv_state (B, d_conv-1, dI), h (B, dI, N)).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist import shard
+from repro.models.params import Spec
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array    # (B, d_conv-1, dI)
+    h: jax.Array       # (B, dI, N) fp32
+
+
+def mamba_specs(cfg: ArchConfig):
+    m = cfg.mamba
+    d, dI, N, R = cfg.d_model, cfg.d_inner_mamba, m.d_state, cfg.dt_rank
+    return {
+        "in_proj": Spec((d, 2 * dI), ("embed", "dinner")),
+        "conv_w": Spec((m.d_conv, dI), (None, "dinner"), scale=0.5),
+        "conv_b": Spec((dI,), ("dinner",), "zeros"),
+        "w_xdbc": Spec((dI, R + 2 * N), ("dinner", None)),
+        "dt_proj": Spec((R, dI), (None, "dinner")),
+        "dt_bias": Spec((dI,), ("dinner",), "constant", const=-4.6),  # softplus ~= 0.01
+        "A_log": Spec((dI, N), ("dinner", None), "zeros"),            # A = -1
+        "D": Spec((dI,), ("dinner",), "ones"),
+        "out_proj": Spec((dI, d), ("dinner", "embed")),
+    }
+
+
+def _causal_conv(p, x: jax.Array, prev: Optional[jax.Array]):
+    """Depthwise causal conv1d. x:(B,S,dI); prev:(B,dc-1,dI) or None."""
+    dc = p["conv_w"].shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = sum(xp[:, j:j + S, :] * p["conv_w"][j].astype(x.dtype) for j in range(dc))
+    new_prev = xp[:, -(dc - 1):, :].astype(jnp.float32) if dc > 1 else prev
+    return y + p["conv_b"].astype(x.dtype), new_prev
+
+
+def _ssm_chunk(a, bx, h0):
+    """Associative scan within one chunk. a,bx: (B,Lc,dI,N) fp32; h0:(B,dI,N)."""
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    A_cum, B_cum = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    h = A_cum * h0[:, None] + B_cum
+    return h, h[:, -1]
+
+
+def mamba_mixer(p, cfg: ArchConfig, x: jax.Array,
+                state: Optional[MambaState] = None
+                ) -> Tuple[jax.Array, Optional[MambaState]]:
+    """x: (B,S,D) -> (out (B,S,D), new_state)."""
+    m = cfg.mamba
+    B, S, D = x.shape
+    dI, N, R = cfg.d_inner_mamba, m.d_state, cfg.dt_rank
+
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = shard(x_in, "batch", None, "dinner")
+    x_conv, conv_state = _causal_conv(p, x_in, state.conv if state else None)
+    x_conv = jax.nn.silu(x_conv)
+
+    xdbc = x_conv @ p["w_xdbc"].astype(x.dtype)
+    dt_in, Bm, Cm = jnp.split(xdbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(x.dtype)
+                         + p["dt_bias"].astype(x.dtype))        # (B,S,dI)
+    dt = dt.astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (dI,N)
+
+    h0 = state.h if state is not None else jnp.zeros((B, dI, N), jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    xf = x_conv.astype(jnp.float32)
+
+    chunk = min(m.chunk, S)
+    if S % chunk:
+        chunk = S  # fall back to single chunk for ragged smoke shapes
+    nchunk = S // chunk
+
+    def chunk_body(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * chunk, chunk, 1)
+        dt_c, B_c, C_c, x_c = sl(dt), sl(Bf), sl(Cf), sl(xf)
+        a = jnp.exp(dt_c[..., None] * A)                        # (B,Lc,dI,N)
+        bx = (dt_c * x_c)[..., None] * B_c[:, :, None, :]
+        h_all, h_last = _ssm_chunk(a, bx, h)
+        y_c = jnp.einsum("blin,bln->bli", h_all, C_c)           # (B,Lc,dI)
+        return h_last, y_c
+
+    # nested remat: without it the layer-level checkpoint still stashes the
+    # full (chunks, B, Lc, dI, N) fp32 scan residuals for backward — the
+    # dominant memory term at frontier scale (see EXPERIMENTS.md §Perf)
+    chunk_body_ckpt = jax.checkpoint(chunk_body)
+    if nchunk == 1:
+        h_last, y = chunk_body_ckpt(h0, 0)
+    else:
+        h_last, ys = jax.lax.scan(chunk_body_ckpt, h0, jnp.arange(nchunk))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, dI)
+
+    y = (y + xf * p["D"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = shard(y, "batch", None, "dinner")
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_state = MambaState(conv_state, h_last)
+    return out, new_state
+
+
+def mamba_decode_step(p, cfg: ArchConfig, x: jax.Array, state: MambaState
+                      ) -> Tuple[jax.Array, MambaState]:
+    """Single-token step. x: (B,1,D)."""
+    m = cfg.mamba
+    R, N = cfg.dt_rank, m.d_state
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv, conv_state = _causal_conv(p, x_in, state.conv)
+    x_conv = jax.nn.silu(x_conv)
+    xdbc = x_conv @ p["w_xdbc"].astype(x.dtype)
+    dt_in, Bm, Cm = jnp.split(xdbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(x.dtype)
+                         + p["dt_bias"].astype(x.dtype)).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0, :, None] * A)                          # (B,dI,N)
+    bx = (dt[:, 0] * x_conv.astype(jnp.float32)[:, 0])[..., None] \
+        * Bm.astype(jnp.float32)[:, 0, :, None].transpose(0, 2, 1)
+    h = a * state.h + bx
+    y = jnp.einsum("bin,bn->bi", h, Cm.astype(jnp.float32)[:, 0])[:, None, :]
+    y = (y + x_conv.astype(jnp.float32) * p["D"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype), MambaState(conv_state, h)
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int) -> MambaState:
+    m = cfg.mamba
+    dI = cfg.d_inner_mamba
+    return MambaState(
+        conv=jnp.zeros((batch, m.d_conv - 1, dI), jnp.float32),
+        h=jnp.zeros((batch, dI, m.d_state), jnp.float32),
+    )

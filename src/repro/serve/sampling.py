@@ -1,0 +1,36 @@
+"""Token sampling: greedy / temperature / top-k / top-p (nucleus)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 1.0
+    top_k: int = 0          # 0 = off
+    top_p: float = 1.0      # 1 = off
+    greedy: bool = False
+
+
+def sample(logits: jax.Array, rng: jax.Array,
+           p: SamplingParams = SamplingParams()) -> jax.Array:
+    """logits: (B, V) fp32 -> token ids (B,) int32."""
+    if p.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / jnp.maximum(p.temperature, 1e-6)
+    if p.top_k:
+        kth = jax.lax.top_k(logits, p.top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    if p.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative mass >= top_p
+        cutoff_idx = jnp.sum(cum < p.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,283 @@
+"""Concept-drift detectors as pure JAX step functions (S2CE §2.4).
+
+Each detector is ``(state, x) -> (state, level)`` with level 0=stable,
+1=warning, 2=drift — steppable under ``lax.scan`` for whole-stream
+evaluation, and cheap enough for the S2 "microsecond updates" criterion
+(benchmarks/bench_streams.py measures the per-update latency).
+
+Implemented: DDM (Gama'04), EDDM (Baena-Garcia'06), Page-Hinkley, and a
+fixed-memory ADWIN variant (exponential bucket histogram with capped bucket
+rows, so state is a static-shape array — required for jit).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+STABLE, WARNING, DRIFT = 0, 1, 2
+
+
+# ---------------------------------------------------------------------------
+# DDM
+# ---------------------------------------------------------------------------
+
+class DDMState(NamedTuple):
+    n: jax.Array
+    p: jax.Array          # running error rate
+    s_min: jax.Array      # min of p + s
+    p_min: jax.Array
+    level: jax.Array
+
+
+def ddm_init() -> DDMState:
+    return DDMState(jnp.zeros(()), jnp.zeros(()), jnp.asarray(1e9),
+                    jnp.asarray(1e9), jnp.zeros((), jnp.int32))
+
+
+def ddm_step(state: DDMState, error: jax.Array,
+             warn: float = 2.0, drift: float = 3.0) -> Tuple[DDMState, jax.Array]:
+    n = state.n + 1.0
+    p = state.p + (error - state.p) / n
+    s = jnp.sqrt(p * (1 - p) / jnp.maximum(n, 1.0))
+    # track minima only after warm-up: tiny-n noise would otherwise set an
+    # absurdly low baseline and cause false alarms (MOA does the same)
+    better = jnp.logical_and(n >= 30, (p + s) < (state.p_min + state.s_min))
+    p_min = jnp.where(better, p, state.p_min)
+    s_min = jnp.where(better, s, state.s_min)
+    level = jnp.where(
+        (p + s) > (p_min + drift * s_min), DRIFT,
+        jnp.where((p + s) > (p_min + warn * s_min), WARNING, STABLE)
+    ).astype(jnp.int32)
+    level = jnp.where(n < 30, STABLE, level).astype(jnp.int32)  # warm-up (MOA)
+    # on drift: reset statistics (keep detection sticky for one step)
+    reset = level == DRIFT
+    new = DDMState(
+        n=jnp.where(reset, 0.0, n),
+        p=jnp.where(reset, 0.0, p),
+        s_min=jnp.where(reset, 1e9, s_min),
+        p_min=jnp.where(reset, 1e9, p_min),
+        level=level,
+    )
+    return new, level
+
+
+# ---------------------------------------------------------------------------
+# EDDM (distance-between-errors)
+# ---------------------------------------------------------------------------
+
+class EDDMState(NamedTuple):
+    n_err: jax.Array
+    since_last: jax.Array
+    mean_d: jax.Array
+    var_d: jax.Array
+    best: jax.Array       # max of mean + 2*std
+    level: jax.Array
+
+
+def eddm_init() -> EDDMState:
+    return EDDMState(jnp.zeros(()), jnp.zeros(()), jnp.zeros(()),
+                     jnp.zeros(()), jnp.asarray(-1e9),
+                     jnp.zeros((), jnp.int32))
+
+
+def eddm_step(state: EDDMState, error: jax.Array, alpha: float = 0.92,
+              beta: float = 0.85) -> Tuple[EDDMState, jax.Array]:
+    since = state.since_last + 1.0
+
+    def on_error(st):
+        n = st.n_err + 1.0
+        delta = since - st.mean_d
+        mean_d = st.mean_d + delta / n
+        var_d = st.var_d + delta * (since - mean_d)
+        std = jnp.sqrt(var_d / jnp.maximum(n, 1.0))
+        metric = mean_d + 2 * std
+        best = jnp.maximum(st.best, metric)
+        ratio = metric / jnp.maximum(best, 1e-9)
+        level = jnp.where(ratio < beta, DRIFT,
+                          jnp.where(ratio < alpha, WARNING, STABLE))
+        warm = n < 50
+        level = jnp.where(warm, STABLE, level).astype(jnp.int32)
+        reset = level == DRIFT
+        return EDDMState(
+            n_err=jnp.where(reset, 0.0, n),
+            since_last=jnp.zeros(()),
+            mean_d=jnp.where(reset, 0.0, mean_d),
+            var_d=jnp.where(reset, 0.0, var_d),
+            best=jnp.where(reset, -1e9, best),
+            level=level)
+
+    def no_error(st):
+        return EDDMState(st.n_err, since, st.mean_d, st.var_d, st.best,
+                         jnp.zeros((), jnp.int32))
+
+    new = jax.lax.cond(error > 0.5, on_error, no_error, state)
+    return new, new.level
+
+
+# ---------------------------------------------------------------------------
+# Page-Hinkley
+# ---------------------------------------------------------------------------
+
+class PHState(NamedTuple):
+    n: jax.Array
+    mean: jax.Array
+    cum: jax.Array
+    cum_min: jax.Array
+    level: jax.Array
+
+
+def ph_init() -> PHState:
+    return PHState(jnp.zeros(()), jnp.zeros(()), jnp.zeros(()),
+                   jnp.zeros(()), jnp.zeros((), jnp.int32))
+
+
+def ph_step(state: PHState, x: jax.Array, delta: float = 0.005,
+            lam: float = 50.0) -> Tuple[PHState, jax.Array]:
+    n = state.n + 1.0
+    mean = state.mean + (x - state.mean) / n
+    cum = state.cum + x - mean - delta
+    cum_min = jnp.minimum(state.cum_min, cum)
+    level = jnp.where(cum - cum_min > lam, DRIFT, STABLE).astype(jnp.int32)
+    reset = level == DRIFT
+    new = PHState(jnp.where(reset, 0.0, n), jnp.where(reset, 0.0, mean),
+                  jnp.where(reset, 0.0, cum), jnp.where(reset, 0.0, cum_min),
+                  level)
+    return new, level
+
+
+# ---------------------------------------------------------------------------
+# Fixed-memory ADWIN (exponential bucket histogram)
+# ---------------------------------------------------------------------------
+
+class AdwinState(NamedTuple):
+    # buckets[l, m]: (count, sum) — level l holds buckets of size 2^l
+    counts: jax.Array     # (L, M)
+    sums: jax.Array       # (L, M)
+    n_buckets: jax.Array  # (L,) used slots per level
+    level: jax.Array
+
+
+ADWIN_LEVELS = 12
+ADWIN_M = 5               # buckets per level before merge (MOA default)
+
+
+def adwin_init() -> AdwinState:
+    return AdwinState(
+        counts=jnp.zeros((ADWIN_LEVELS, ADWIN_M)),
+        sums=jnp.zeros((ADWIN_LEVELS, ADWIN_M)),
+        n_buckets=jnp.zeros((ADWIN_LEVELS,), jnp.int32),
+        level=jnp.zeros((), jnp.int32),
+    )
+
+
+def _insert(counts, sums, n_buckets, c, s, lvl):
+    """Insert bucket (c, s) at level lvl; cascade merges when full."""
+    def body(carry, l):
+        counts, sums, n_buckets, c, s, pending = carry
+        here = jnp.logical_and(pending, l >= lvl)
+        nb = n_buckets[l]
+        room = nb < ADWIN_M
+
+        def do_insert(args):
+            counts, sums, n_buckets = args
+            counts = counts.at[l, nb].set(c)
+            sums = sums.at[l, nb].set(s)
+            n_buckets = n_buckets.at[l].add(1)
+            return counts, sums, n_buckets
+
+        counts, sums, n_buckets = jax.lax.cond(
+            jnp.logical_and(here, room), do_insert,
+            lambda a: a, (counts, sums, n_buckets))
+        inserted = jnp.logical_and(here, room)
+
+        # merge two oldest into one bucket for the next level
+        def do_merge(args):
+            counts, sums, n_buckets = args
+            mc = counts[l, 0] + counts[l, 1]
+            ms = sums[l, 0] + sums[l, 1]
+            counts = counts.at[l, :-2].set(counts[l, 2:]).at[l, -2:].set(0.0).at[l, ADWIN_M - 2].set(0.0)
+            sums = sums.at[l, :-2].set(sums[l, 2:]).at[l, -2:].set(0.0)
+            n_buckets = n_buckets.at[l].add(-2)
+            return (counts, sums, n_buckets), mc, ms
+
+        def no_merge(args):
+            return args, 0.0, 0.0
+
+        need_merge = jnp.logical_and(here, jnp.logical_not(room))
+        (counts, sums, n_buckets), mc, ms = jax.lax.cond(
+            need_merge, do_merge, no_merge, (counts, sums, n_buckets))
+        # after a merge we must (a) insert the pending bucket here (room now)
+        def insert_after_merge(args):
+            counts, sums, n_buckets = args
+            nb2 = n_buckets[l]
+            counts = counts.at[l, nb2].set(c)
+            sums = sums.at[l, nb2].set(s)
+            n_buckets = n_buckets.at[l].add(1)
+            return counts, sums, n_buckets
+        counts, sums, n_buckets = jax.lax.cond(
+            need_merge, insert_after_merge, lambda a: a,
+            (counts, sums, n_buckets))
+        # (b) cascade the merged bucket upward
+        c = jnp.where(need_merge, mc, c)
+        s = jnp.where(need_merge, ms, s)
+        pending = jnp.where(here, need_merge, pending)
+        return (counts, sums, n_buckets, c, s, pending), None
+
+    (counts, sums, n_buckets, _, _, _), _ = jax.lax.scan(
+        body, (counts, sums, n_buckets, c, s, jnp.asarray(True)),
+        jnp.arange(ADWIN_LEVELS))
+    return counts, sums, n_buckets
+
+
+def adwin_step(state: AdwinState, x: jax.Array,
+               delta: float = 0.002) -> Tuple[AdwinState, jax.Array]:
+    counts, sums, n_buckets = _insert(
+        state.counts, state.sums, state.n_buckets,
+        jnp.asarray(1.0), x.astype(jnp.float32), jnp.asarray(0, jnp.int32))
+
+    # drift check: scan cut points old->new (levels high..low); ADWIN cuts
+    # where |mean_old - mean_new| exceeds eps(delta)
+    total_n = counts.sum()
+    total_s = sums.sum()
+    # suffix accumulation over flattened (level-major, oldest=highest level)
+    flat_c = counts[::-1].reshape(-1)
+    flat_s = sums[::-1].reshape(-1)
+    cum_c = jnp.cumsum(flat_c)
+    cum_s = jnp.cumsum(flat_s)
+    n0, s0 = cum_c, cum_s                    # "old" window prefix
+    n1, s1 = total_n - cum_c, total_s - cum_s
+    valid = (n0 >= 1) & (n1 >= 1)
+    m0 = s0 / jnp.maximum(n0, 1.0)
+    m1 = s1 / jnp.maximum(n1, 1.0)
+    m = 1.0 / (1.0 / jnp.maximum(n0, 1.0) + 1.0 / jnp.maximum(n1, 1.0))
+    dp = jnp.log(2.0 * jnp.log(jnp.maximum(total_n, 2.0)) / delta)
+    eps = jnp.sqrt(dp / (2.0 * jnp.maximum(m, 1e-9)))  # Hoeffding, x in [0,1]
+    cut = valid & (jnp.abs(m0 - m1) > eps)
+    drift = jnp.any(cut)
+
+    # on drift: drop the oldest half of the window (clear highest levels)
+    def do_drop(args):
+        counts, sums, n_buckets = args
+        half = ADWIN_LEVELS // 2
+        counts = counts.at[half:].set(0.0)
+        sums = sums.at[half:].set(0.0)
+        n_buckets = n_buckets.at[half:].set(0)
+        return counts, sums, n_buckets
+
+    counts, sums, n_buckets = jax.lax.cond(
+        drift, do_drop, lambda a: a, (counts, sums, n_buckets))
+    level = jnp.where(drift, DRIFT, STABLE).astype(jnp.int32)
+    return AdwinState(counts, sums, n_buckets, level), level
+
+
+# ---------------------------------------------------------------------------
+# Batched stream evaluation
+# ---------------------------------------------------------------------------
+
+def run_detector(step_fn, init_state, xs: jax.Array):
+    """Run a detector over a whole stream with lax.scan.
+    Returns (final_state, levels (n,))."""
+    return jax.lax.scan(step_fn, init_state, xs)

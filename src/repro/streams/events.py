@@ -1,0 +1,57 @@
+"""Stream events: the unit of data flowing through an S2CE pipeline.
+
+A :class:`StreamBatch` is a pytree of equal-leading-dim arrays plus
+watermark/ordering metadata — directly shardable over the `batch` logical
+axis, so the same batch object flows from edge preprocessing into cloud
+training without conversion (S2CE O1: data-in-motion and data-at-rest
+processed uniformly).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class StreamBatch:
+    data: Dict[str, Any]                  # str -> array (n, ...)
+    ts: Any = None                        # (n,) event timestamps (float64 sec)
+    source_id: int = 0
+    seq_no: int = 0                       # per-source monotone batch counter
+    watermark: float = 0.0                # max event time fully observed
+    labels_delay: float = 0.0             # label availability lag (§2.5)
+
+    @property
+    def n(self) -> int:
+        return int(next(iter(jax.tree.leaves(self.data))).shape[0])
+
+    def with_data(self, **kw) -> "StreamBatch":
+        d = dict(self.data)
+        d.update(kw)
+        return replace(self, data=d)
+
+    def select(self, idx) -> "StreamBatch":
+        return replace(
+            self,
+            data=jax.tree.map(lambda a: a[idx], self.data),
+            ts=None if self.ts is None else self.ts[idx],
+        )
+
+    def concat(self, other: "StreamBatch") -> "StreamBatch":
+        data = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                            self.data, other.data)
+        ts = None
+        if self.ts is not None and other.ts is not None:
+            ts = np.concatenate([np.asarray(self.ts), np.asarray(other.ts)])
+        return replace(self, data=data, ts=ts,
+                       watermark=max(self.watermark, other.watermark))
+
+
+def merge_watermark(batches) -> float:
+    """Pipeline watermark = min over sources (an event-time barrier)."""
+    return min(b.watermark for b in batches)

@@ -1,0 +1,96 @@
+"""Multi-stream fusion: time-window joins and delayed-label alignment
+(S2CE Input Interface / Transformations; §2.5 delayed labels).
+
+Host-side (numpy) ring buffers: fusion is an ingest-time, latency-bound
+operation that runs before device dispatch. The joined output is a
+StreamBatch ready for the device pipeline.
+"""
+
+from __future__ import annotations
+
+import bisect
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.streams.events import StreamBatch
+
+
+@dataclass
+class WindowJoin:
+    """Join two streams on event time: for each left event, attach the
+    nearest right event within `tolerance` seconds (as-of join)."""
+    tolerance: float = 1.0
+    max_buffer: int = 100_000
+    _rt: List[float] = field(default_factory=list)
+    _rv: Deque = field(default_factory=deque)
+
+    def push_right(self, batch: StreamBatch, key: str = "x"):
+        ts = np.asarray(batch.ts)
+        vals = np.asarray(batch.data[key])
+        for t, v in zip(ts, vals):
+            self._rt.append(float(t))
+            self._rv.append(v)
+        while len(self._rt) > self.max_buffer:
+            self._rt.pop(0)
+            self._rv.popleft()
+
+    def join_left(self, batch: StreamBatch, out_key: str = "joined"
+                  ) -> Tuple[StreamBatch, np.ndarray]:
+        """Returns (batch with `out_key` column, matched mask)."""
+        ts = np.asarray(batch.ts)
+        vals = list(self._rv)
+        matched = np.zeros(len(ts), bool)
+        out = None
+        for i, t in enumerate(ts):
+            j = bisect.bisect_left(self._rt, t)
+            best, bd = None, self.tolerance
+            for jj in (j - 1, j):
+                if 0 <= jj < len(self._rt):
+                    d = abs(self._rt[jj] - t)
+                    if d <= bd:
+                        best, bd = jj, d
+            if best is not None:
+                matched[i] = True
+                if out is None:
+                    out = np.zeros((len(ts),) + np.shape(vals[best]),
+                                   np.asarray(vals[best]).dtype)
+                out[i] = vals[best]
+        if out is None:
+            out = np.zeros((len(ts), 0), np.float32)
+        return batch.with_data(**{out_key: out}), matched
+
+
+@dataclass
+class DelayedLabelAligner:
+    """Features arrive now; labels arrive `delay` seconds later. Buffers
+    features until their label shows up, then emits joined batches —
+    the §2.5 "verification latency" setting."""
+    delay_tolerance: float = 0.5
+    _pending: Dict[int, Tuple[float, np.ndarray]] = field(default_factory=dict)
+
+    def push_features(self, ids: np.ndarray, ts: np.ndarray, x: np.ndarray):
+        for i, t, xi in zip(ids, ts, x):
+            self._pending[int(i)] = (float(t), xi)
+
+    def push_labels(self, ids: np.ndarray, y: np.ndarray
+                    ) -> Optional[StreamBatch]:
+        xs, ys, tss = [], [], []
+        for i, yi in zip(ids, y):
+            hit = self._pending.pop(int(i), None)
+            if hit is not None:
+                tss.append(hit[0])
+                xs.append(hit[1])
+                ys.append(yi)
+        if not xs:
+            return None
+        return StreamBatch(
+            data={"x": np.stack(xs).astype(np.float32),
+                  "y": np.asarray(ys, np.int32)},
+            ts=np.asarray(tss), watermark=float(max(tss)))
+
+    @property
+    def backlog(self) -> int:
+        return len(self._pending)

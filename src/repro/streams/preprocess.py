@@ -1,0 +1,108 @@
+"""Streaming preprocessing (S2CE Transformations component).
+
+Instance/attribute transforms with O(1) running state: normalization
+(Welford), missing-value imputation, streaming PCA-lite projection
+(Oja's rule) for online dimensionality reduction (§2.5), and feature
+hashing. All are (state, batch) -> (state, batch) pure functions, so they
+can be placed on edge or cloud by the orchestrator interchangeably.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.streams.events import StreamBatch
+
+
+# ---------------------------------------------------------------------------
+# Running normalization (Welford)
+# ---------------------------------------------------------------------------
+
+class NormState(NamedTuple):
+    n: jax.Array
+    mean: jax.Array
+    m2: jax.Array
+
+
+def norm_init(dim: int) -> NormState:
+    return NormState(jnp.zeros(()), jnp.zeros((dim,)), jnp.zeros((dim,)))
+
+
+def norm_update_apply(state: NormState, x: jax.Array
+                      ) -> Tuple[NormState, jax.Array]:
+    """x: (n, d). Updates running stats with the batch, then normalizes."""
+    n_b = x.shape[0]
+    mean_b = jnp.mean(x, axis=0)
+    m2_b = jnp.sum(jnp.square(x - mean_b), axis=0)
+    n = state.n + n_b
+    delta = mean_b - state.mean
+    mean = state.mean + delta * (n_b / jnp.maximum(n, 1.0))
+    m2 = state.m2 + m2_b + jnp.square(delta) * state.n * n_b / jnp.maximum(n, 1.0)
+    var = m2 / jnp.maximum(n - 1.0, 1.0)
+    y = (x - mean) * jax.lax.rsqrt(var + 1e-6)
+    return NormState(n, mean, m2), y
+
+
+# ---------------------------------------------------------------------------
+# Missing-value imputation (NaN -> running mean)
+# ---------------------------------------------------------------------------
+
+def impute_with_mean(state: NormState, x: jax.Array) -> jax.Array:
+    return jnp.where(jnp.isnan(x), state.mean[None, :], x)
+
+
+# ---------------------------------------------------------------------------
+# Online PCA-lite (Oja's rule) — streaming dimensionality reduction
+# ---------------------------------------------------------------------------
+
+class OjaState(NamedTuple):
+    w: jax.Array          # (d, k) projection
+    n: jax.Array
+
+
+def oja_init(dim: int, k: int, seed: int = 0) -> OjaState:
+    w = jax.random.normal(jax.random.PRNGKey(seed), (dim, k)) / jnp.sqrt(dim)
+    return OjaState(w, jnp.zeros(()))
+
+
+def oja_update_project(state: OjaState, x: jax.Array, lr: float = 1e-2
+                       ) -> Tuple[OjaState, jax.Array]:
+    """One Oja step on the batch covariance, then project."""
+    y = x @ state.w                              # (n, k)
+    grad = x.T @ y / x.shape[0]                  # (d, k)
+    w = state.w + lr * (grad - state.w @ jnp.triu(state.w.T @ grad))
+    # orthonormalize softly via QR every step (cheap for small k)
+    q, r = jnp.linalg.qr(w)
+    w = q * jnp.sign(jnp.diagonal(r))[None, :]
+    return OjaState(w, state.n + x.shape[0]), x @ w
+
+
+# ---------------------------------------------------------------------------
+# Feature hashing (sparse/categorical -> fixed dim)
+# ---------------------------------------------------------------------------
+
+def hash_features(ids: jax.Array, vals: jax.Array, dim: int,
+                  seed: int = 17) -> jax.Array:
+    """ids/vals: (n, f) -> dense (n, dim) via signed feature hashing."""
+    a = 2 * seed + 1
+    h = (ids * a + 0x9E37) % 2_147_483_647
+    slot = h % dim
+    sign = jnp.where((h // dim) % 2 == 0, 1.0, -1.0)
+    n, f = ids.shape
+    out = jnp.zeros((n, dim), vals.dtype)
+    return out.at[jnp.arange(n)[:, None], slot].add(vals * sign)
+
+
+def preprocess_batch(state, batch: StreamBatch,
+                     normalize: bool = True, impute: bool = True
+                     ) -> Tuple[object, StreamBatch]:
+    """The standard edge-side preprocessing pipeline for feature streams."""
+    x = batch.data["x"]
+    if impute:
+        x = impute_with_mean(state, x)
+    if normalize:
+        state, x = norm_update_apply(state, x)
+    return state, batch.with_data(x=x)

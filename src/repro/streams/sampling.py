@@ -1,0 +1,100 @@
+"""Stream sampling for edge-side volume reduction (S2CE O2).
+
+Property-preserving (unbiased) sampling is what lets the edge cut volume
+without biasing downstream models: Algorithm-R reservoir sampling (uniform
+over the whole history) and per-batch Bernoulli thinning, plus stratified
+reservoirs for label balance. Pure-JAX, jit-steppable.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReservoirState(NamedTuple):
+    buf: jax.Array        # (k, d)
+    extra: jax.Array      # (k,) payload (e.g. labels)
+    seen: jax.Array       # () total items observed
+    rng: jax.Array
+
+
+def reservoir_init(k: int, dim: int, seed: int = 0) -> ReservoirState:
+    return ReservoirState(
+        buf=jnp.zeros((k, dim)),
+        extra=jnp.zeros((k,), jnp.int32),
+        seen=jnp.zeros((), jnp.int32),
+        rng=jax.random.PRNGKey(seed),
+    )
+
+
+def reservoir_update(state: ReservoirState, x: jax.Array, y: jax.Array
+                     ) -> ReservoirState:
+    """Algorithm R over a batch. x: (n, d); y: (n,)."""
+    k = state.buf.shape[0]
+
+    def step(st, item):
+        xi, yi = item
+        rng, r1 = jax.random.split(st.rng)
+        seen = st.seen + 1
+        # position: if seen <= k -> seen-1 else random j in [0, seen)
+        j = jax.random.randint(r1, (), 0, seen)
+        idx = jnp.where(seen <= k, seen - 1, j)
+        take = (seen <= k) | (j < k)
+        idx = jnp.clip(idx, 0, k - 1)
+        buf = jnp.where(take, st.buf.at[idx].set(xi), st.buf)
+        extra = jnp.where(take, st.extra.at[idx].set(yi), st.extra)
+        return ReservoirState(buf, extra, seen, rng), None
+
+    state, _ = jax.lax.scan(step, state, (x, y.astype(jnp.int32)))
+    return state
+
+
+def bernoulli_thin(rng: jax.Array, x: jax.Array, rate: float
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Unbiased thinning: keep each item w.p. `rate`; returns (mask, rng).
+    Downstream estimators reweight by 1/rate."""
+    rng, sub = jax.random.split(rng)
+    mask = jax.random.bernoulli(sub, rate, (x.shape[0],))
+    return mask, rng
+
+
+class StratifiedReservoir(NamedTuple):
+    states: ReservoirState          # stacked per class (C leading dim)
+
+
+def stratified_init(n_classes: int, k: int, dim: int,
+                    seed: int = 0) -> StratifiedReservoir:
+    def one(c):
+        return reservoir_init(k, dim, seed + c)
+    states = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[one(c) for c in range(n_classes)])
+    return StratifiedReservoir(states)
+
+
+def stratified_update(sr: StratifiedReservoir, x: jax.Array, y: jax.Array,
+                      n_classes: int) -> StratifiedReservoir:
+    def upd_class(c, st):
+        mask = (y == c)
+        # gather class items to front; pad with repeats masked out by weight 0
+        w = mask.astype(jnp.float32)
+        # simple approach: scan full batch, take only when class matches
+        def step(s, item):
+            xi, yi, mi = item
+            def do(s):
+                return reservoir_update(
+                    ReservoirState(*s), xi[None], yi[None])
+            s2 = jax.lax.cond(mi, lambda ss: tuple(do(ss)),
+                              lambda ss: ss, tuple(s))
+            return s2, None
+        st_t, _ = jax.lax.scan(step, tuple(st), (x, y, mask))
+        return ReservoirState(*st_t)
+
+    new_states = []
+    for c in range(n_classes):
+        st_c = jax.tree.map(lambda a: a[c], sr.states)
+        new_states.append(upd_class(c, st_c))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_states)
+    return StratifiedReservoir(stacked)

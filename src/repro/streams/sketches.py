@@ -1,0 +1,120 @@
+"""Stream summarization sketches (edge-side, S2CE O2).
+
+Count-Min (frequency estimation; Pallas kernel on the ingest hot path),
+Misra-Gries heavy hitters, and streaming moments — the summaries an edge
+node ships upstream instead of raw events.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels.countmin import hash_ids
+from repro.kernels.ref import countmin_ref
+
+
+class CountMin(NamedTuple):
+    table: jax.Array      # (depth, width) int32
+    seeds: jax.Array      # (depth, 2) int32 odd constants < 2^15
+
+
+def countmin_init(depth: int = 4, width: int = 1024, seed: int = 0) -> CountMin:
+    rng = np.random.default_rng(seed)
+    seeds = jnp.asarray(rng.integers(1, 2**14, (depth, 2)) * 2 + 1, jnp.int32)
+    return CountMin(jnp.zeros((depth, width), jnp.int32), seeds)
+
+
+def countmin_add(cm: CountMin, ids: jax.Array, use_kernel: bool = False
+                 ) -> CountMin:
+    depth, width = cm.table.shape
+    if use_kernel and kops.pallas_available():
+        inc = kops.countmin_update(ids, depth=depth, width=width,
+                                   seeds=cm.seeds)
+    else:
+        inc = countmin_ref(ids, depth, width, np.asarray(cm.seeds))
+    return cm._replace(table=cm.table + inc)
+
+
+def countmin_query(cm: CountMin, ids: jax.Array) -> jax.Array:
+    depth, width = cm.table.shape
+    ests = []
+    for d in range(depth):
+        h = hash_ids(ids, cm.seeds[d, 0], cm.seeds[d, 1], width)
+        ests.append(cm.table[d, h])
+    return jnp.min(jnp.stack(ests), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Misra-Gries heavy hitters
+# ---------------------------------------------------------------------------
+
+class MisraGries(NamedTuple):
+    keys: jax.Array       # (k,) item ids, -1 = empty
+    counts: jax.Array     # (k,)
+
+
+def mg_init(k: int = 64) -> MisraGries:
+    return MisraGries(jnp.full((k,), -1, jnp.int32), jnp.zeros((k,), jnp.int32))
+
+
+def mg_update(mg: MisraGries, ids: jax.Array) -> MisraGries:
+    def step(st, item):
+        keys, counts = st
+        hit = keys == item
+        has = jnp.any(hit)
+        empty = counts == 0
+        has_empty = jnp.any(empty)
+        slot = jnp.argmax(hit)
+        empty_slot = jnp.argmax(empty)
+
+        def on_hit(_):
+            return keys, counts.at[slot].add(1)
+
+        def on_empty(_):
+            return keys.at[empty_slot].set(item), counts.at[empty_slot].set(1)
+
+        def on_full(_):
+            return keys, counts - 1
+
+        keys2, counts2 = jax.lax.cond(
+            has, on_hit,
+            lambda o: jax.lax.cond(has_empty, on_empty, on_full, o), None)
+        return (keys2, counts2), None
+
+    (keys, counts), _ = jax.lax.scan(step, (mg.keys, mg.counts),
+                                     ids.astype(jnp.int32))
+    return MisraGries(keys, counts)
+
+
+# ---------------------------------------------------------------------------
+# Streaming moments (count / mean / var / min / max per feature)
+# ---------------------------------------------------------------------------
+
+class Moments(NamedTuple):
+    n: jax.Array
+    mean: jax.Array
+    m2: jax.Array
+    min: jax.Array
+    max: jax.Array
+
+
+def moments_init(dim: int) -> Moments:
+    return Moments(jnp.zeros(()), jnp.zeros((dim,)), jnp.zeros((dim,)),
+                   jnp.full((dim,), jnp.inf), jnp.full((dim,), -jnp.inf))
+
+
+def moments_update(m: Moments, x: jax.Array) -> Moments:
+    nb = x.shape[0]
+    mean_b = x.mean(0)
+    m2_b = jnp.sum(jnp.square(x - mean_b), axis=0)
+    n = m.n + nb
+    delta = mean_b - m.mean
+    mean = m.mean + delta * nb / jnp.maximum(n, 1.0)
+    m2 = m.m2 + m2_b + jnp.square(delta) * m.n * nb / jnp.maximum(n, 1.0)
+    return Moments(n, mean, m2, jnp.minimum(m.min, x.min(0)),
+                   jnp.maximum(m.max, x.max(0)))

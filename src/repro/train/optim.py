@@ -1,0 +1,247 @@
+"""Optimizers built from scratch (no optax): AdamW, Adafactor, Lion, SGD.
+
+Each optimizer is a pair of pure functions plus a *state-axes* reflector so
+distributed launchers can shard optimizer state exactly like parameters
+(ZeRO). States respect ``cfg.opt_state_dtype`` and optionally carry fp32
+master weights (``cfg.fp32_master``) when params live in bf16.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]                    # params -> state
+    update: Callable[[Any, Any, Any, jax.Array], tuple]  # (grads, state, params, step) -> (new_params, new_state)
+    state_axes: Callable[[Any], Any]              # param_axes -> state_axes
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def _zeros_like_tree(tree, dtype):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(lr_val: float):
+    return lambda step: jnp.asarray(lr_val, jnp.float32)
+
+
+def _as_schedule(lr):
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32,
+          fp32_master: bool = False) -> Optimizer:
+    lr = _as_schedule(lr)
+
+    def init(params):
+        st = {"m": _zeros_like_tree(params, state_dtype),
+              "v": _zeros_like_tree(params, state_dtype)}
+        if fp32_master:
+            st["master"] = _cast_tree(params, jnp.float32)
+        return st
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1.0 - jnp.power(b1, stepf)
+        bc2 = 1.0 - jnp.power(b2, stepf)
+        lr_t = lr(step)
+        base = state.get("master", params)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m_new = b1 * m32 + (1 - b1) * g
+            v_new = b2 * v32 + (1 - b2) * jnp.square(g)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            p32 = p.astype(jnp.float32)
+            p_new = p32 - lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                                  + weight_decay * p32)
+            return p_new, m_new.astype(state_dtype), v_new.astype(state_dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], base)
+        p_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v_new = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": m_new, "v": v_new}
+        if "master" in state:
+            new_state["master"] = p_new
+        params_dtype = jax.tree.leaves(params)[0].dtype
+        return _cast_tree(p_new, params_dtype), new_state
+
+    def state_axes(param_axes):
+        st = {"m": param_axes, "v": param_axes}
+        if fp32_master:
+            st["master"] = param_axes
+        return st
+
+    return Optimizer(init, update, state_axes)
+
+
+# ---------------------------------------------------------------------------
+# Lion (memory-light: single momentum)
+# ---------------------------------------------------------------------------
+
+def lion(lr, b1: float = 0.9, b2: float = 0.99, weight_decay: float = 0.1,
+         state_dtype=jnp.bfloat16) -> Optimizer:
+    lr = _as_schedule(lr)
+
+    def init(params):
+        return {"m": _zeros_like_tree(params, state_dtype)}
+
+    def update(grads, state, params, step):
+        lr_t = lr(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32)
+            d = jnp.sign(b1 * m32 + (1 - b1) * g)
+            p32 = p.astype(jnp.float32)
+            p_new = p32 - lr_t * (d + weight_decay * p32)
+            m_new = b2 * m32 + (1 - b2) * g
+            return p_new.astype(p.dtype), m_new.astype(state_dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        p_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return p_new, {"m": m_new}
+
+    return Optimizer(init, update, lambda ax: {"m": ax})
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment — frontier-scale memory)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    lr = _as_schedule(lr)
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(leaf, params)}
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        rho = jnp.minimum(1e-2, 1.0 / jnp.power(stepf, decay))
+        beta = 1.0 - rho
+        lr_t = lr(step)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(vr / jnp.mean(vr, axis=-1, keepdims=True) + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                nv = {"vr": vr, "vc": vc}
+            else:
+                v2 = beta * v["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v2 + eps)
+                nv = {"v": v2}
+            # update clipping
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            p32 = p.astype(jnp.float32)
+            p_new = p32 - lr_t * (u + weight_decay * p32)
+            return p_new.astype(p.dtype), nv
+
+        out = jax.tree.map(upd, grads, state["v"], params,
+                           is_leaf=lambda x: isinstance(x, dict) and
+                           ("vr" in x or "v" in x))
+        p_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        v_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return p_new, {"v": v_new}
+
+    def state_axes(param_axes):
+        def leaf(ax):
+            if len(ax) >= 2:
+                return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+            return {"v": ax}
+        return {"v": jax.tree.map(
+            leaf, param_axes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x))}
+
+    return Optimizer(init, update, state_axes)
+
+
+# ---------------------------------------------------------------------------
+# SGD (momentum)
+# ---------------------------------------------------------------------------
+
+def sgd(lr, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    lr = _as_schedule(lr)
+
+    def init(params):
+        return {"m": _zeros_like_tree(params, jnp.float32)}
+
+    def update(grads, state, params, step):
+        lr_t = lr(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            m_new = momentum * m + g
+            d = g + momentum * m_new if nesterov else m_new
+            return (p.astype(jnp.float32) - lr_t * d).astype(p.dtype), m_new
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        p_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m_new = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return p_new, {"m": m_new}
+
+    return Optimizer(init, update, lambda ax: {"m": ax})
+
+
+def make_optimizer(cfg, name: str = "adamw", lr=3e-4, total_steps: int = 10000,
+                   warmup: int = 200) -> Optimizer:
+    from repro.models.layers import dtype_of
+    sched = cosine_schedule(lr, warmup, total_steps) if not callable(lr) else lr
+    if name == "adamw":
+        return adamw(sched, state_dtype=dtype_of(cfg.opt_state_dtype),
+                     fp32_master=cfg.fp32_master and cfg.param_dtype != "float32")
+    if name == "lion":
+        return lion(sched)
+    if name == "adafactor":
+        return adafactor(sched)
+    if name == "sgd":
+        return sgd(sched)
+    raise KeyError(name)

@@ -1,0 +1,97 @@
+"""Train-step factory: microbatched gradient accumulation (lax.scan),
+global-norm clipping, optimizer update, metrics. Pure function of
+(params, opt_state, step, batch) suitable for pjit with donated buffers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist import pin_params
+from repro.models.transformer import lm_loss
+from repro.train.optim import Optimizer
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), n
+
+
+def _split_microbatches(batch: dict, m: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % m == 0, f"batch {b} not divisible by microbatches {m}"
+        return x.reshape(m, b // m, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
+                    impl: str = "chunked", clip_norm: float = 1.0,
+                    loss_fn: Optional[Callable] = None,
+                    microbatches: Optional[int] = None) -> Callable:
+    """Returns train_step(params, opt_state, step, batch) ->
+    (params, opt_state, step+1, metrics)."""
+    loss_fn = loss_fn or (lambda p, b: lm_loss(p, cfg, b, impl=impl))
+    M = microbatches if microbatches is not None else cfg.microbatches
+    try:
+        from repro.models import model_zoo as _zoo
+        _axes = _zoo.param_axes(cfg)
+    except Exception:  # custom loss over non-model params
+        _axes = None
+
+    def grads_of(params, batch):
+        if _axes is not None:
+            # pin the (possibly stacked) weights to their sharded layout so
+            # the partitioner cannot hoist whole-stack all-gathers out of
+            # the microbatch/layer loops (observed 100+ GiB/dev on jamba)
+            params = pin_params(params, _axes)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, step, batch):
+        if M <= 1:
+            loss, metrics, grads = grads_of(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            if _axes is not None:
+                grads = pin_params(grads, _axes)
+        else:
+            mb = _split_microbatches(batch, M)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if _axes is not None:
+                zeros = pin_params(zeros, _axes)
+
+            def body(acc, one):
+                l, m, g = grads_of(params, one)
+                # pin per-microbatch grads to the PARAM shardings: the
+                # cross-data reduction becomes a per-layer reduce-scatter
+                # instead of a full-tree all-reduce every microbatch
+                # (§Perf iteration 1: ~8x collective-byte cut on mistral)
+                if _axes is not None:
+                    g = pin_params(g, _axes)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / M, acc, g)
+                return acc, l
+            grads, losses = jax.lax.scan(body, zeros, mb)
+            loss = jnp.mean(losses)
+            metrics = {}
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, step)
+        out_metrics = {"loss": loss.astype(jnp.float32),
+                       "grad_norm": gnorm.astype(jnp.float32)}
+        for k, v in (metrics or {}).items():
+            out_metrics[k] = v.astype(jnp.float32)
+        return new_params, new_opt, step + 1, out_metrics
+
+    return train_step

@@ -1,0 +1,71 @@
+"""Checkpointing: roundtrip, async publish, latest-step, GC, restore-into-
+different-dtype, and manifest metadata."""
+
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import checkpoint as ckpt
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+                   "layers": [jnp.ones((3,)), jnp.zeros((2, 2))]},
+        "opt": {"m": jnp.full((8, 4), 0.5)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 10, t, meta={"loss": 1.5})
+    restored, meta = ckpt.restore(tmp_path, t)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), t, restored)
+    assert meta["step"] == 10
+    assert meta["meta"]["loss"] == 1.5
+
+
+def test_latest_step_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, s, t, keep=2)
+    assert ckpt.latest_step(tmp_path) == 5
+    restored, meta = ckpt.restore(tmp_path, t)
+    assert meta["step"] == 5
+    # gc kept only 2
+    kept = sorted(p.name for p in tmp_path.iterdir())
+    assert len([k for k in kept if k.startswith("step_")]) == 2
+
+
+def test_async_checkpointer_nonblocking(tmp_path):
+    t = jax.tree.map(lambda x: jnp.tile(x, (64, 1))
+                     if x.ndim == 2 else x, _tree())
+    ac = ckpt.AsyncCheckpointer(tmp_path)
+    t0 = time.perf_counter()
+    ac.save(100, t)
+    submit_time = time.perf_counter() - t0
+    ac.wait()
+    assert ckpt.latest_step(tmp_path) == 100
+    restored, _ = ckpt.restore(tmp_path, t)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), t, restored)
+
+
+def test_restore_casts_to_like_dtype(tmp_path):
+    t = {"w": jnp.ones((4,), jnp.float32)}
+    ckpt.save(tmp_path, 1, t)
+    like = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    restored, _ = ckpt.restore(tmp_path, like)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    ckpt.save(tmp_path, 1, {"w": jnp.ones((4,))})
+    with pytest.raises(KeyError):
+        ckpt.restore(tmp_path, {"w": jnp.ones((4,)), "extra": jnp.ones((2,))})

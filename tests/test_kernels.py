@@ -1,0 +1,147 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.countmin import countmin_update
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan_bd
+from repro.kernels.rwkv6_wkv import rwkv6_wkv
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,T,H,KV,D", [
+    (1, 128, 128, 2, 2, 64),
+    (2, 256, 256, 4, 2, 64),     # GQA
+    (1, 200, 200, 2, 1, 128),    # ragged seq (padding path)
+    (2, 64, 192, 2, 2, 64),      # cross-length (q shorter than kv)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(B, S, T, H, KV, D, dtype, causal):
+    if causal and S != T:
+        pytest.skip("causal with offset tested via model path")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, S, H, D), dtype)
+    k = _rand(ks[1], (B, T, KV, D), dtype)
+    v = _rand(ks[2], (B, T, KV, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, bq=64, bk=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 64), (64, 32), (128, 128)])
+def test_flash_attention_block_shapes(bq, bk):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (1, 128, 2, 64), jnp.float32)
+    k = _rand(ks[1], (1, 128, 2, 64), jnp.float32)
+    v = _rand(ks[2], (1, 128, 2, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, bq=bq, bk=bk, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,hs,chunk", [
+    (1, 32, 1, 16, 8),
+    (2, 64, 3, 32, 16),
+    (1, 50, 2, 64, 16),          # ragged
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_wkv_matches_ref(B, S, H, hs, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    r = _rand(ks[0], (B, S, H, hs), dtype) * 0.5
+    k = _rand(ks[1], (B, S, H, hs), dtype) * 0.5
+    v = _rand(ks[2], (B, S, H, hs), dtype) * 0.5
+    lw = -jnp.exp(_rand(ks[3], (B, S, H, hs), jnp.float32) - 2.0)  # < 0
+    u = _rand(ks[4], (H, hs), jnp.float32) * 0.3
+    h0 = _rand(ks[5], (B, H, hs, hs), jnp.float32) * 0.1
+    o, h_last = rwkv6_wkv(r, k, v, lw.astype(dtype), u, h0, chunk=chunk,
+                          interpret=True)
+    o_ref, h_ref = ref.rwkv6_wkv_ref(r, k, v, lw, u, h0)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h_ref),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# Mamba selective scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,dI,N,chunk,bd", [
+    (1, 32, 64, 4, 16, 32),
+    (2, 64, 128, 8, 32, 64),
+    (1, 48, 256, 16, 16, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba_scan_matches_ref(B, S, dI, N, chunk, bd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    dt = jax.nn.softplus(_rand(ks[0], (B, S, dI), jnp.float32) - 2).astype(dtype)
+    x = _rand(ks[1], (B, S, dI), dtype)
+    Bm = _rand(ks[2], (B, S, N), dtype)
+    Cm = _rand(ks[3], (B, S, N), dtype)
+    A = -jnp.exp(_rand(ks[4], (dI, N), jnp.float32) * 0.5)
+    h0 = jnp.zeros((B, dI, N), jnp.float32)
+    y, h_last = mamba_scan_bd(dt, x, Bm, Cm, A, h0, chunk=chunk, bd=bd,
+                              interpret=True)
+    y_ref, h_ref = ref.mamba_scan_ref(dt, x, Bm, Cm, A, h0)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h_ref),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# Count-Min sketch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,depth,width,block", [
+    (100, 2, 64, 32),
+    (1000, 4, 128, 256),
+    (37, 3, 32, 64),             # n < block
+])
+def test_countmin_matches_ref(n, depth, width, block):
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, 10_000, n), jnp.int32)
+    seeds = jnp.asarray(rng.integers(1, 2**14, (depth, 2)) * 2 + 1,
+                        jnp.int32)   # 15-bit: products fit int32 exactly
+    out = countmin_update(ids, depth, width, seeds, block=block,
+                          interpret=True)
+    want = ref.countmin_ref(ids, depth, width, np.asarray(seeds))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_countmin_never_underestimates():
+    rng = np.random.default_rng(1)
+    ids = jnp.asarray(rng.zipf(1.5, 5000) % 1000, jnp.int32)
+    depth, width = 4, 256
+    seeds = jnp.asarray(rng.integers(1, 2**14, (depth, 2)) * 2 + 1, jnp.int32)
+    sk = np.asarray(countmin_update(ids, depth, width, seeds, interpret=True))
+    P = 2_147_483_647
+    true = np.bincount(np.asarray(ids), minlength=1000)
+    for item in np.unique(np.asarray(ids))[:50]:
+        est = min(sk[d, ((int(item) * int(seeds[d, 0]) + int(seeds[d, 1]))
+                         % P) % width] for d in range(depth))
+        assert est >= true[item]

@@ -1,0 +1,104 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import logical_to_spec
+from repro.dist.compression import dequantize_int8, quantize_int8
+from repro.streams import sketches as sk
+from repro.streams import preprocess as prep
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+    @property
+    def axis_names(self):
+        return tuple(self.shape)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    dim=st.integers(1, 4096),
+    sizes=st.tuples(st.sampled_from([2, 4, 8, 16]),
+                    st.sampled_from([2, 4, 8, 16])),
+)
+def test_logical_to_spec_always_divides(dim, sizes):
+    """Whatever the dim, the chosen mesh axes always divide it exactly."""
+    mesh = _FakeMesh({"data": sizes[0], "model": sizes[1]})
+    spec = logical_to_spec(("batch",), {"batch": ("data", "model")},
+                           mesh, (dim,))
+    part = spec[0] if len(spec) else None
+    axes = (part,) if isinstance(part, str) else (part or ())
+    prod = 1
+    for a in axes:
+        prod *= mesh.shape[a]
+    assert dim % prod == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                min_size=1, max_size=256))
+def test_int8_quantization_error_bound(xs):
+    x = jnp.asarray(np.asarray(xs, np.float32))
+    q, scale = quantize_int8(x)
+    deq = dequantize_int8(q, scale)
+    # symmetric quantization error is bounded by scale/2 per element
+    bound = float(scale) * 0.5 + 1e-6
+    assert float(jnp.max(jnp.abs(deq - x))) <= bound + 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=500),
+       st.integers(0, 2**14 - 1))
+def test_countmin_overestimates_only(ids, seed):
+    rng = np.random.default_rng(seed)
+    depth, width = 3, 64
+    seeds = np.asarray(rng.integers(1, 2**14, (depth, 2)) * 2 + 1, np.int32)
+    from repro.kernels.ref import countmin_ref
+    table = np.asarray(countmin_ref(jnp.asarray(ids, jnp.int32), depth,
+                                    width, seeds))
+    true = np.bincount(ids, minlength=1001)
+    P = 2_147_483_647
+    for item in set(ids):
+        est = min(table[d, ((item * int(seeds[d, 0]) + int(seeds[d, 1]))
+                            % P) % width] for d in range(depth))
+        assert est >= true[item]
+
+
+@settings(max_examples=25, deadline=None, database=None)
+@given(st.integers(1, 5), st.integers(0, 1000))
+def test_welford_matches_two_pass(nbatches, seed):
+    rng = np.random.default_rng(seed)
+    dim = 3
+    st_ = prep.norm_init(dim)
+    allx = []
+    for _ in range(nbatches):
+        # keep |mean| ~ std so fp32 single-pass variance stays well-posed
+        x = rng.normal(loc=rng.normal(), scale=2.0,
+                       size=(rng.integers(4, 64), dim)).astype(np.float32)
+        allx.append(x)
+        st_, _ = prep.norm_update_apply(st_, jnp.asarray(x))
+    cat = np.concatenate(allx)
+    np.testing.assert_allclose(np.asarray(st_.mean), cat.mean(0),
+                               rtol=1e-3, atol=5e-3)
+    var = np.asarray(st_.m2) / max(len(cat) - 1, 1)
+    # fp32 single-pass vs float64 two-pass: loose but meaningful bound
+    np.testing.assert_allclose(var, cat.var(0, ddof=1), rtol=6e-2, atol=6e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 100))
+def test_moments_min_max_invariants(seed):
+    rng = np.random.default_rng(seed)
+    m = sk.moments_init(4)
+    xs = rng.normal(size=(100, 4)).astype(np.float32)
+    for i in range(0, 100, 25):
+        m = sk.moments_update(m, jnp.asarray(xs[i:i + 25]))
+    np.testing.assert_allclose(np.asarray(m.min), xs.min(0), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(m.max), xs.max(0), rtol=1e-5)
+    assert int(m.n) == 100
