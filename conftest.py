@@ -1,0 +1,19 @@
+"""Repo-level pytest bootstrap.
+
+Must run before jax is imported: forces 8 host-platform CPU devices so
+mesh-aware tests (dist, sharded train step) exercise real multi-device
+layouts on CPU, and puts ``src/`` on sys.path so a plain ``pytest``
+works without PYTHONPATH=src.
+"""
+
+import os
+import sys
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+_cur = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _cur:
+    os.environ["XLA_FLAGS"] = f"{_cur} {_FLAG}".strip()
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

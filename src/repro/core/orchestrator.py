@@ -29,6 +29,7 @@ from repro.core.costmodel import CLOUD_POD, EDGE_NODE, Resource
 from repro.core.offload import OffloadController, OffloadDecision
 from repro.core.placement import Objective, standard_pipeline
 from repro.core.sla import SLA, SLATracker
+from repro.dist.elastic import ElasticController
 from repro.ml import metrics as mmetrics
 from repro.ml import online
 from repro.streams import drift as drift_mod
@@ -49,6 +50,9 @@ class StreamJob:
     edge_resource: Resource = EDGE_NODE
     cloud_resource: Resource = CLOUD_POD
     objective: Objective = field(default_factory=Objective)
+    # elastic cloud-pool sizing (dist/elastic): starting worker count and cap
+    workers: int = 1
+    max_workers: int = 16
 
 
 @dataclass
@@ -56,6 +60,8 @@ class JobMetrics:
     events: int = 0
     drift_alarms: int = 0
     migrations: int = 0
+    rescales: int = 0
+    workers: int = 1
     preq: Optional[dict] = None
     sla: Optional[dict] = None
     decisions: List[str] = field(default_factory=list)
@@ -72,6 +78,8 @@ class Orchestrator:
         self.controller = OffloadController(self.ops, self.resources,
                                             job.objective)
         self.sla = SLATracker(job.sla)
+        self.elastic = ElasticController(workers=job.workers,
+                                         max_workers=job.max_workers)
 
         # edge state
         self.norm = prep.norm_init(job.dim)
@@ -134,13 +142,22 @@ class Orchestrator:
             dt = time.perf_counter() - t0
             rate = batch.n / max(dt, 1e-9)
             self.sla.observe(dt, rate)
-            d = self.controller.observe(
-                step, rate_fn(step) if rate_fn else rate, self.sla)
+            offered = rate_fn(step) if rate_fn else rate
+            d = self.controller.observe(step, offered, self.sla)
             if d.reason != "hold":
                 self.metrics.decisions.append(
                     f"{step}:{d.reason} cut={d.cut}")
+            # elastic cloud-pool sizing: grow/shrink the worker count when
+            # the offered rate persistently over/under-runs the pool
+            plan = self.elastic.observe(step, offered, rate)
+            if plan.changed:
+                self.metrics.decisions.append(
+                    f"{step}:elastic-{plan.action} workers={plan.workers} "
+                    f"({plan.reason})")
             self.metrics.events += batch.n
         self.metrics.migrations = self.controller.migrations()
+        self.metrics.rescales = self.elastic.rescales
+        self.metrics.workers = self.elastic.workers
         self.metrics.preq = mmetrics.preq_metrics(self.preq)
         self.metrics.sla = self.sla.report()
         return self.metrics

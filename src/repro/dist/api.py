@@ -1,0 +1,74 @@
+"""Logical-axis -> PartitionSpec mapping.
+
+The single place where "logical" tensor dimension names (``batch``,
+``heads``, ``ff``, ...) meet "physical" mesh axis names (``pod``,
+``data``, ``model``). The invariant this module guarantees — and that
+``tests/test_property.py`` property-checks — is *safe degradation*: a
+logical dim is only mapped onto mesh axes whose total size divides the
+dim exactly; anything else stays replicated. Rules can therefore be
+written once for the production mesh and reused unchanged on a laptop,
+a reduced smoke config, or a degraded post-failure mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence, Tuple
+
+from jax.sharding import PartitionSpec
+
+
+def _as_tuple(rule) -> Tuple[str, ...]:
+    """Normalize a rule value (str | None | sequence of str) to a tuple."""
+    if rule is None:
+        return ()
+    if isinstance(rule, str):
+        return (rule,)
+    return tuple(rule)
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]],
+                    rules: Mapping[str, object],
+                    mesh,
+                    shape: Optional[Sequence[int]] = None) -> PartitionSpec:
+    """Map per-dim logical names to a PartitionSpec on ``mesh``.
+
+    For each dim, the rule's mesh axes are taken as an ordered candidate
+    list and greedily accumulated: an axis is used when it exists in the
+    mesh, is not already consumed by an earlier dim, and (when ``shape``
+    is given) keeps the accumulated size-product dividing the dim; other
+    candidates are skipped. Dims with no rule, no usable candidate, or
+    ``None`` stay unsharded.
+
+    ``mesh`` only needs ``.shape`` (name -> size mapping) and
+    ``.axis_names`` — a real ``jax.sharding.Mesh`` or any stand-in works.
+    """
+    sizes = dict(mesh.shape)
+    used: set = set()
+    parts = []
+    for i, name in enumerate(logical_axes):
+        if name is None or name not in rules:
+            parts.append(None)
+            continue
+        chosen = []
+        prod = 1
+        dim = None if shape is None else int(shape[i])
+        for ax in _as_tuple(rules[name]):
+            if ax not in sizes or ax in used:
+                continue
+            if dim is not None and dim % (prod * sizes[ax]) != 0:
+                continue
+            chosen.append(ax)
+            prod *= sizes[ax]
+        used.update(chosen)
+        if not chosen:
+            parts.append(None)
+        elif len(chosen) == 1:
+            parts.append(chosen[0])
+        else:
+            parts.append(tuple(chosen))
+    return PartitionSpec(*parts)
+
+
+def spec_is_replicated(spec: PartitionSpec) -> bool:
+    """True when a spec places nothing on any mesh axis."""
+    return all(p is None for p in spec)

@@ -1,0 +1,165 @@
+"""Elastic worker management: add/remove-worker resharding decisions.
+
+Two layers:
+
+  * mechanism — :func:`rebuild_mesh` carves a new (data, model) mesh out
+    of the surviving devices after failures/scale events, and
+    :func:`reshard_tree` moves a checkpoint/parameter tree onto it
+    (values preserved; layout re-derived from the logical rules).
+  * policy — :class:`ElasticController` watches offered vs. achieved
+    stream rate (the elasticity loop of arXiv:1709.01363) and emits
+    :class:`ScalePlan` grow/shrink/hold decisions with hysteresis; the
+    orchestrator logs these next to its offload decisions.
+
+Data-parallel worker counts stay powers of two so global batches keep
+dividing evenly (see api.logical_to_spec's divisibility contract).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Mechanism: mesh rebuild + tree resharding
+# ---------------------------------------------------------------------------
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def factor_mesh(n_devices: int, prefer_model: int = 1):
+    """(data, model) shape for ``n_devices``: honour ``prefer_model``
+    (halving until it fits) and keep data a power of two."""
+    model = max(1, int(prefer_model))
+    while model > n_devices:
+        model //= 2
+    data = _pow2_floor(max(1, n_devices // model))
+    return data, model
+
+
+def rebuild_mesh(devices: Sequence, failed: Sequence = (),
+                 prefer_model: int = 1):
+    """New ("data","model") mesh over the devices that survived.
+
+    ``failed`` entries may be device ids (ints) or device objects.
+    """
+    import jax
+
+    failed_ids = {getattr(f, "id", f) for f in failed}
+    alive = [d for d in devices if d.id not in failed_ids]
+    if not alive:
+        raise RuntimeError("no surviving devices to rebuild a mesh from")
+    data, model = factor_mesh(len(alive), prefer_model)
+    n = data * model
+    grid = np.array(alive[:n], dtype=object).reshape(data, model)
+    return jax.sharding.Mesh(grid, ("data", "model"))
+
+
+def reshard_tree(tree, axes_tree, rules: dict, mesh):
+    """Re-place a tree onto ``mesh`` per its logical axes (values kept).
+
+    Layouts are re-derived through ``rules["param"]`` with the usual
+    divisibility fallback, so a tree sharded for an 8-way mesh restores
+    cleanly onto a degraded 4-way one.
+    """
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.dist.api import logical_to_spec
+
+    def leaf(x, ax):
+        spec = logical_to_spec(ax, rules.get("param", {}), mesh,
+                               np.shape(x))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(leaf, tree, axes_tree)
+
+
+# ---------------------------------------------------------------------------
+# Policy: scale decisions
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ScalePlan:
+    action: str              # "hold" | "grow" | "shrink"
+    workers: int             # target data-parallel worker count
+    reason: str
+    # a grow/shrink that is not an even re-partition of the old layout
+    # must round through a checkpoint (save -> rebuild mesh -> restore)
+    needs_checkpoint_cycle: bool = False
+
+    @property
+    def changed(self) -> bool:
+        return self.action != "hold"
+
+
+def plan_reshard(old_workers: int, new_workers: int, *,
+                 reason: str = "manual") -> ScalePlan:
+    """Resharding plan for an explicit worker-count change."""
+    if new_workers == old_workers:
+        return ScalePlan("hold", old_workers, reason)
+    action = "grow" if new_workers > old_workers else "shrink"
+    even = (max(old_workers, new_workers) % min(old_workers, new_workers) == 0)
+    return ScalePlan(action, new_workers, reason,
+                     needs_checkpoint_cycle=not even)
+
+
+class ElasticController:
+    """Hysteresis-guarded worker scaling from rate telemetry.
+
+    ``observe(step, offered, achieved)`` compares the offered stream
+    rate against pool capacity, where ``achieved`` is the measured
+    *per-worker* throughput (pool capacity = achieved x workers); the
+    orchestrator passes its single-pipeline rate. Sustained overload
+    (utilization > ``high``) doubles workers; sustained slack
+    (utilization < ``low``) halves them. ``patience`` consecutive
+    breaches are required before acting, and ``cooldown`` steps must
+    pass between actions, so transient bursts don't thrash the mesh.
+    """
+
+    def __init__(self, workers: int = 1, *, min_workers: int = 1,
+                 max_workers: int = 64, high: float = 1.0, low: float = 0.35,
+                 patience: int = 3, cooldown: int = 10):
+        self.workers = int(workers)
+        self.min_workers = min_workers
+        self.max_workers = max_workers
+        self.high = high
+        self.low = low
+        self.patience = patience
+        self.cooldown = cooldown
+        self._over = 0
+        self._under = 0
+        self._last_action_step: Optional[int] = None
+        self.rescales = 0
+
+    def observe(self, step: int, offered: float, achieved: float) -> ScalePlan:
+        # utilization: how much of the pool's throughput the stream needs
+        util = offered / max(achieved * self.workers, 1e-9)
+        self._over = self._over + 1 if util > self.high else 0
+        self._under = self._under + 1 if util < self.low else 0
+        in_cooldown = (self._last_action_step is not None and
+                       step - self._last_action_step < self.cooldown)
+        if in_cooldown:
+            return ScalePlan("hold", self.workers, "cooldown")
+        if self._over >= self.patience and self.workers < self.max_workers:
+            return self._act(step, min(self.workers * 2, self.max_workers),
+                             f"overload util={util:.2f}")
+        if self._under >= self.patience and self.workers > self.min_workers:
+            return self._act(step, max(self.workers // 2, self.min_workers),
+                             f"slack util={util:.2f}")
+        return ScalePlan("hold", self.workers, "steady")
+
+    def _act(self, step: int, new_workers: int, reason: str) -> ScalePlan:
+        plan = plan_reshard(self.workers, new_workers, reason=reason)
+        self.workers = new_workers
+        self._over = self._under = 0
+        self._last_action_step = step
+        self.rescales += 1
+        return plan

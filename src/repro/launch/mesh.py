@@ -31,3 +31,27 @@ def make_local_mesh(data: int = 1, model: int = 1):
     n = data * model
     return jax.make_mesh((data, model), ("data", "model"),
                          devices=jax.devices()[:n])
+
+
+def make_elastic_mesh(prefer_model: int = 1, failed=()):
+    """Best-effort mesh over whatever devices currently survive.
+
+    Used after an elastic grow/shrink or a worker failure: carves the
+    largest power-of-two data axis (x ``prefer_model``) out of the
+    non-failed local devices via dist/elastic.
+    """
+    import jax
+
+    from repro.dist.elastic import rebuild_mesh
+    return rebuild_mesh(jax.devices(), failed=failed,
+                        prefer_model=prefer_model)
+
+
+def mesh_context(cfg, data: int = 1, model: int = 1, *, shape=None):
+    """``use_mesh`` context for a local (data, model) mesh with the
+    arch's recipe rules — the one-liner launchers use to activate
+    distribution (a (1,1) request still yields a working context)."""
+    from repro.dist import use_mesh
+    from repro.dist.sharding import build_rules
+    return use_mesh(make_local_mesh(data, model),
+                    build_rules(cfg, shape=shape))

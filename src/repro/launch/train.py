@@ -38,15 +38,29 @@ def main():
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
+    # a >1 mesh on a CPU host needs forced host devices, and the flag must
+    # land before jax initializes; harmless on real accelerator platforms.
+    # An inherited flag with a too-small count is raised to n_req.
+    import os
+    import re
+    n_req = args.data_mesh * args.model_mesh
+    if n_req > 1:
+        flags = os.environ.get("XLA_FLAGS", "")
+        m = re.search(r"--xla_force_host_platform_device_count=(\d+)", flags)
+        if m is None:
+            flags = f"{flags} --xla_force_host_platform_device_count={n_req}"
+        elif int(m.group(1)) < n_req:
+            flags = flags.replace(
+                m.group(0), f"--xla_force_host_platform_device_count={n_req}")
+        os.environ["XLA_FLAGS"] = flags.strip()
+
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.configs import get_config
     from repro.dist import checkpoint as ckpt
-    from repro.dist import use_mesh
-    from repro.dist.sharding import build_rules
-    from repro.launch.mesh import make_local_mesh
+    from repro.launch.mesh import mesh_context
     from repro.models import model_zoo as zoo
     from repro.streams.generators import DriftSpec, TokenStream
     from repro.train.optim import make_optimizer
@@ -59,9 +73,6 @@ def main():
         cfg = cfg.with_overrides(microbatches=args.microbatches)
 
     n_dev = args.data_mesh * args.model_mesh
-    mesh = make_local_mesh(args.data_mesh, args.model_mesh) if n_dev > 1 else None
-    rules = build_rules(cfg) if mesh is not None else None
-
     print(f"arch={cfg.name} params={zoo.param_count(cfg)/1e6:.1f}M "
           f"recipe={cfg.recipe} mesh={n_dev} devices")
 
@@ -85,7 +96,8 @@ def main():
         print(f"resumed from step {start}")
 
     import contextlib
-    ctx = use_mesh(mesh, rules) if mesh is not None else contextlib.nullcontext()
+    ctx = (mesh_context(cfg, args.data_mesh, args.model_mesh)
+           if n_dev > 1 else contextlib.nullcontext())
     t0 = time.perf_counter()
     with ctx:
         for i in range(start, args.steps):

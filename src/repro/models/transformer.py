@@ -282,6 +282,25 @@ def _constrain_layer_params(lp, axes):
         x.ndim + 1 == len(ax) else x, lp, axes)
 
 
+@jax.custom_vjp
+def _diff_barrier(tree):
+    """optimization_barrier with a differentiation rule (jax<=0.4.37 has
+    none): barrier the primals forward and the cotangents backward, so the
+    gather-serialization effect holds in both passes."""
+    return jax.lax.optimization_barrier(tree)
+
+
+def _diff_barrier_fwd(tree):
+    return _diff_barrier(tree), None
+
+
+def _diff_barrier_bwd(_, ct):
+    return (jax.lax.optimization_barrier(ct),)
+
+
+_diff_barrier.defvjp(_diff_barrier_fwd, _diff_barrier_bwd)
+
+
 def run_stack(params, cfg: ArchConfig, pattern, x, *, positions, memory,
               caches, impl, stack_axes=None):
     """params: stacked slot-param list; caches: stacked cache trees or None."""
@@ -295,8 +314,7 @@ def run_stack(params, cfg: ArchConfig, pattern, x, *, positions, memory,
                 # serialize weight-gathers across unrolled slots: slot i+1's
                 # FSDP all-gather must wait for slot i's output, otherwise
                 # every slot's full weights are live simultaneously
-                x, layer_params = jax.lax.optimization_barrier(
-                    (x, layer_params))
+                x, layer_params = _diff_barrier((x, layer_params))
             c = layer_caches[i] if layer_caches is not None else None
             x, nc, a = apply_slot(layer_params[i], cfg, slot, x,
                                   positions=positions, memory=memory,
@@ -312,7 +330,7 @@ def run_stack(params, cfg: ArchConfig, pattern, x, *, positions, memory,
             # barrier + per-leaf constraints pin the per-layer param slice
             # inside the loop so XLA cannot hoist FSDP all-gathers of the
             # whole stack out of the scan
-            lp = jax.lax.optimization_barrier(lp)
+            lp = _diff_barrier(lp)
             lp = _constrain_layer_params(lp, stack_axes)
             x, _, aux = body(x, lp, None)
             return x, aux
@@ -321,7 +339,7 @@ def run_stack(params, cfg: ArchConfig, pattern, x, *, positions, memory,
 
     def scan_body(x, xs):
         lp, lc = xs
-        lp = jax.lax.optimization_barrier(lp)
+        lp = _diff_barrier(lp)
         lp = _constrain_layer_params(lp, stack_axes)
         x, nc, aux = body(x, lp, lc)
         return x, (nc, aux)

@@ -38,9 +38,16 @@ def _split_microbatches(batch: dict, m: int) -> dict:
 def make_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
                     impl: str = "chunked", clip_norm: float = 1.0,
                     loss_fn: Optional[Callable] = None,
-                    microbatches: Optional[int] = None) -> Callable:
+                    microbatches: Optional[int] = None,
+                    grad_compression: Optional[str] = None) -> Callable:
     """Returns train_step(params, opt_state, step, batch) ->
-    (params, opt_state, step+1, metrics)."""
+    (params, opt_state, step+1, metrics).
+
+    ``grad_compression="int8"`` passes the accumulated gradients through
+    the edge-uplink int8 wire format (dist/compression) before clipping —
+    what an edge worker's sync sees on a constrained uplink."""
+    if grad_compression not in (None, "int8"):
+        raise ValueError(f"unknown grad_compression {grad_compression!r}")
     loss_fn = loss_fn or (lambda p, b: lm_loss(p, cfg, b, impl=impl))
     M = microbatches if microbatches is not None else cfg.microbatches
     try:
@@ -86,6 +93,9 @@ def make_train_step(cfg: ArchConfig, optimizer: Optimizer, *,
             grads, losses = jax.lax.scan(body, zeros, mb)
             loss = jnp.mean(losses)
             metrics = {}
+        if grad_compression == "int8":
+            from repro.dist.compression import int8_roundtrip
+            grads = jax.tree.map(int8_roundtrip, grads)
         grads, gnorm = clip_by_global_norm(grads, clip_norm)
         new_params, new_opt = optimizer.update(grads, opt_state, params, step)
         out_metrics = {"loss": loss.astype(jnp.float32),

@@ -67,5 +67,11 @@ def test_restore_casts_to_like_dtype(tmp_path):
 
 def test_restore_missing_leaf_raises(tmp_path):
     ckpt.save(tmp_path, 1, {"w": jnp.ones((4,))})
-    with pytest.raises(KeyError):
+    with pytest.raises(ValueError, match="extra"):
         ckpt.restore(tmp_path, {"w": jnp.ones((4,)), "extra": jnp.ones((2,))})
+
+
+def test_restore_extra_leaf_raises(tmp_path):
+    ckpt.save(tmp_path, 1, {"w": jnp.ones((4,)), "gone": jnp.ones((2,))})
+    with pytest.raises(ValueError, match="gone"):
+        ckpt.restore(tmp_path, {"w": jnp.ones((4,))})

@@ -1,6 +1,10 @@
 """Hypothesis property tests on system invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (optional dep)")
 from hypothesis import given, settings, strategies as st
 
 import jax
