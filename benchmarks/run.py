@@ -86,6 +86,63 @@ def bench_s3_offload(rows, quick):
     rows.append(("s3_offload_decision", us, f"migrations={ctl.migrations()}"))
 
 
+def bench_pipeline_partition(rows, quick):
+    """Tentpole path: per-batch execution under a cut, cold segment
+    re-fuse on migration, and cached re-partition (cut revisit)."""
+    from repro.core.pipeline import standard_stream_pipeline
+    pipe = standard_stream_pipeline(dim=16, sample_rate=0.5)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(256, 16)),
+                    jnp.float32)
+    y = jnp.asarray(np.random.default_rng(1).integers(0, 2, 256), jnp.int32)
+    rng = jax.random.PRNGKey(0)
+    states = pipe.init_states()
+
+    def step(states, rng, cut):
+        states, out = pipe.run(states, {"x": x, "y": y, "rng": rng}, cut)
+        return states, out["rng"]
+
+    t0 = time.perf_counter()
+    states, rng = step(states, rng, 4)        # cold: compile both segments
+    cold = (time.perf_counter() - t0) * 1e6
+    rows.append(("pipeline_refuse_cold", cold, f"{pipe.compiles} compiles"))
+    us = _timeit(lambda s, r: step(s, r, 4)[1], states, rng, iters=20)
+    rows.append(("pipeline_step_cut4", us, f"{256 / us * 1e6:.0f} events/s"))
+    t0 = time.perf_counter()
+    states, rng = step(states, rng, 2)        # migration: re-fuse 2 segments
+    mig = (time.perf_counter() - t0) * 1e6
+    states, rng = step(states, rng, 4)        # revisit: cache hit
+    t1 = time.perf_counter()
+    states, rng = step(states, rng, 2)
+    rev = (time.perf_counter() - t1) * 1e6
+    rows.append(("pipeline_migrate_cold", mig, "segment re-fuse (compile)"))
+    rows.append(("pipeline_migrate_cached", rev,
+                 f"{pipe.cache_hits} cache hits"))
+
+
+def bench_fusion_join(rows, quick):
+    """WindowJoin hot path: vectorized as-of join + slice eviction."""
+    from repro.streams.events import StreamBatch
+    from repro.streams.fusion import WindowJoin
+    j = WindowJoin(tolerance=0.5, max_buffer=20_000)
+    rng = np.random.default_rng(0)
+    n_rounds = 10 if quick else 30
+    t0 = time.perf_counter()
+    n = 0
+    for i in range(n_rounds):
+        ts = i * 1000.0 + np.arange(1000, dtype=np.float64)
+        j.push_right(StreamBatch(
+            data={"x": rng.normal(size=(1000, 8)).astype(np.float32)},
+            ts=ts))
+        left = StreamBatch(
+            data={"x": np.zeros((500, 1), np.float32)},
+            ts=i * 1000.0 + np.sort(rng.random(500) * 1000))
+        j.join_left(left)
+        n += 1500
+    dt = time.perf_counter() - t0
+    rows.append(("fusion_window_join", dt / n_rounds * 1e6,
+                 f"{n / dt:.0f} events/s"))
+
+
 def bench_s4_feature_matrix(rows, quick):
     """S4/Table 1: every 'Desired Platform' feature exists — import one
     representative module per row."""
@@ -188,22 +245,43 @@ def bench_roofline_summary(rows, quick):
         rows.append(("dryrun_cells_fit", 0.0, f"no sweep: {e}"))
 
 
+ALL_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
+               bench_s3_offload, bench_pipeline_partition, bench_fusion_join,
+               bench_s4_feature_matrix, bench_generators, bench_sketches,
+               bench_train_micro, bench_serve_micro, bench_roofline_summary]
+
+# fast perf-path subset for CI (--smoke): skips the DL train/serve micro
+# rows (their substrate is already compiled by the test suite) and fails
+# the process on any ERROR row so perf-path regressions break CI
+SMOKE_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
+                 bench_s3_offload, bench_pipeline_partition,
+                 bench_fusion_join, bench_s4_feature_matrix,
+                 bench_generators, bench_sketches]
+
+
 def main() -> None:
+    import sys
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset + nonzero exit on any ERROR row (CI)")
     args, _ = ap.parse_known_args()
+    quick = args.quick or args.smoke
     rows = []
-    for bench in [bench_s1_throughput_scaling, bench_s2_update_latency,
-                  bench_s3_offload, bench_s4_feature_matrix,
-                  bench_generators, bench_sketches, bench_train_micro,
-                  bench_serve_micro, bench_roofline_summary]:
+    for bench in SMOKE_BENCHES if args.smoke else ALL_BENCHES:
         try:
-            bench(rows, args.quick)
+            bench(rows, quick)
         except Exception as e:  # keep the harness green end-to-end
             rows.append((bench.__name__, -1.0, f"ERROR {type(e).__name__}: {e}"))
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
+    errors = [r for r in rows if str(r[2]).startswith("ERROR")]
+    if args.smoke and errors:
+        print(f"SMOKE FAILED: {len(errors)} benchmark(s) errored",
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == '__main__':

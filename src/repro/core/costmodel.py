@@ -75,15 +75,27 @@ class PipelinePlan:
 
 
 def evaluate_plan(ops: List[OperatorCost], assign: Dict[str, str],
-                  resources: Dict[str, Resource], rate: float) -> PipelinePlan:
+                  resources: Dict[str, Resource], rate: float,
+                  source: Optional[str] = None) -> PipelinePlan:
     """Evaluate a linear pipeline: stage order = list order; data crosses
-    the uplink wherever consecutive stages sit on different resources."""
+    the uplink wherever consecutive stages sit on different resources.
+
+    ``source`` names the resource the stream *originates* at — by default
+    the first edge pool (S2CE ingests at the edge gateway), so an all-cloud
+    plan pays the raw-event uplink instead of getting it for free. Without
+    this charge every placement degenerates to all-cloud and the cut never
+    moves. Pass ``source=""`` to disable (data already at rest in the
+    cloud).
+    """
+    if source is None:
+        source = next((r.name for r in resources.values()
+                       if r.kind == "edge"), "")
     plan = PipelinePlan(dict(assign))
     latency = 0.0
     energy = 0.0
     uplink = 0.0
     per_res_util: Dict[str, float] = {r: 0.0 for r in resources}
-    prev_res = None
+    prev_res = resources[source] if source else None
     in_bytes = ops[0].bytes_per_event if ops else 0.0
     for op in ops:
         res = resources[assign[op.name]]

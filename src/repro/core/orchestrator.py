@@ -1,18 +1,22 @@
 """The S2CE orchestrator: one object that wires the paper's Fig. 2 together.
 
-A :class:`StreamJob` declares sources, the transformation pipeline, the ML
-payload (online learner and/or DL model), and an SLA. The orchestrator:
+A :class:`StreamJob` declares sources, the transformation pipeline (any
+:class:`~repro.core.pipeline.Pipeline` — the default is the classic
+normalize -> sketch -> sample -> train -> drift chain), the ML payload,
+and an SLA. The orchestrator:
 
-  1. costs the pipeline stages and *places* them on cloud/edge pools
-     (core/placement),
-  2. runs the edge stage (preprocess/sample/sketch/pre-model) and the cloud
-     stage (drift-adaptive learning) over the stream,
-  3. monitors rate + SLA and *re-plans* via the offload controller,
-  4. reacts to drift alarms by adapting the learner (reset/LR bump),
+  1. costs the pipeline's op list and *places* it on cloud/edge pools
+     (core/placement) — the same op list the executor runs,
+  2. executes the planned partition: ops[:cut] as the edge segment,
+     ops[cut:] as the cloud segment (core/pipeline),
+  3. monitors rate + SLA, *re-plans* via the offload controller, and
+     re-partitions the pipeline when the cut migrates,
+  4. reacts to drift alarms through each op's declared drift response,
   5. exposes metrics for the Output Interface.
 
-The DL path (assigned architectures) reuses exactly the same train_step /
-serve substrate as the dry-run cells; here it runs reduced configs on CPU.
+Because segments are composed from shared per-op executables (see
+core/pipeline), a migration changes *where* ops run without perturbing
+*what* they compute: results are bitwise-identical to any fixed-cut run.
 """
 
 from __future__ import annotations
@@ -26,17 +30,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import CLOUD_POD, EDGE_NODE, Resource
-from repro.core.offload import OffloadController, OffloadDecision
-from repro.core.placement import Objective, standard_pipeline
+from repro.core.offload import OffloadController
+from repro.core.pipeline import Pipeline, standard_stream_pipeline
+from repro.core.placement import Objective
 from repro.core.sla import SLA, SLATracker
 from repro.dist.elastic import ElasticController
-from repro.ml import metrics as mmetrics
-from repro.ml import online
-from repro.streams import drift as drift_mod
-from repro.streams import preprocess as prep
-from repro.streams import sampling as samp
-from repro.streams import sketches as sk
-from repro.streams.events import StreamBatch
 
 
 @dataclass
@@ -50,6 +48,8 @@ class StreamJob:
     edge_resource: Resource = EDGE_NODE
     cloud_resource: Resource = CLOUD_POD
     objective: Objective = field(default_factory=Objective)
+    # user-supplied operator graph; None -> the standard S2CE chain
+    pipeline: Optional[Pipeline] = None
     # elastic cloud-pool sizing (dist/elastic): starting worker count and cap
     workers: int = 1
     max_workers: int = 16
@@ -65,6 +65,8 @@ class JobMetrics:
     preq: Optional[dict] = None
     sla: Optional[dict] = None
     decisions: List[str] = field(default_factory=list)
+    cuts: List[int] = field(default_factory=list)        # cut per batch
+    outputs: List[dict] = field(default_factory=list)    # when recording
 
 
 class Orchestrator:
@@ -74,71 +76,57 @@ class Orchestrator:
         self.job = job
         self.resources = {job.edge_resource.name: job.edge_resource,
                           job.cloud_resource.name: job.cloud_resource}
-        self.ops = standard_pipeline(job.dim, sample_rate=job.sample_rate)
+        self.pipeline = job.pipeline or standard_stream_pipeline(
+            job.dim, sample_rate=job.sample_rate,
+            drift_detector=job.drift_detector)
+        # the cost model prices the SAME op list the executor runs
+        self.ops = self.pipeline.costs()
         self.controller = OffloadController(self.ops, self.resources,
                                             job.objective)
         self.sla = SLATracker(job.sla)
         self.elastic = ElasticController(workers=job.workers,
                                          max_workers=job.max_workers)
-
-        # edge state
-        self.norm = prep.norm_init(job.dim)
-        self.reservoir = samp.reservoir_init(256, job.dim)
-        self.moments = sk.moments_init(job.dim)
-        # cloud state
-        self.model = online.logreg_init(job.dim)
-        self.preq = mmetrics.preq_init()
-        det = {"ddm": (drift_mod.ddm_init, drift_mod.ddm_step),
-               "eddm": (drift_mod.eddm_init, drift_mod.eddm_step),
-               "ph": (drift_mod.ph_init, drift_mod.ph_step),
-               "adwin": (drift_mod.adwin_init, drift_mod.adwin_step)}[
-                   job.drift_detector]
-        self.det_state = det[0]()
-        self._det_step = jax.jit(det[1])
+        self.states = self.pipeline.init_states()
+        self.cut = 0
         self.metrics = JobMetrics()
-        self._jit_edge = jax.jit(self._edge_stage)
-        self._jit_cloud = jax.jit(self._cloud_stage)
 
-    # -- stages (pure; placement decides WHERE they execute) ---------------
-    def _edge_stage(self, norm, reservoir, moments, x, y, rng, rate):
-        norm, xn = prep.norm_update_apply(norm, x)
-        moments = sk.moments_update(moments, xn)
-        reservoir = samp.reservoir_update(reservoir, xn, y)
-        mask, rng = samp.bernoulli_thin(rng, xn, rate)
-        return norm, reservoir, moments, xn, mask, rng
+    # -- drift response: each op declares its own -------------------------
+    def _apply_drift_response(self):
+        for op in self.pipeline.ops:
+            if op.on_drift is not None:
+                self.states[op.name] = op.on_drift(self.states[op.name])
 
-    def _cloud_stage(self, model, preq, det_state, x, y, mask):
-        p = online.logreg_predict(model, x)
-        err_stream = (jnp.where(p > 0.5, 1, 0) != y).astype(jnp.float32)
-        # prequential: test THEN train (only on sampled rows, reweighted)
-        preq = mmetrics.preq_update(preq, p, y)
-        w = mask.astype(jnp.float32)
-        xw = x * w[:, None]
-        model = online.logreg_update(model, xw, y * mask, lr=0.5)
-        det_state, levels = jax.lax.scan(self._det_step, det_state, err_stream)
-        drifted = jnp.any(levels == drift_mod.DRIFT)
-        return model, preq, det_state, drifted
+    def _collect_op_metrics(self) -> Optional[dict]:
+        out: Dict[str, float] = {}
+        for op in self.pipeline.ops:
+            if op.metrics is not None:
+                out.update(op.metrics(self.states[op.name]))
+        return out or None
 
     # -- main loop ----------------------------------------------------------
     def run(self, batches, rate_fn: Optional[Callable[[int], float]] = None,
-            seed: int = 0) -> JobMetrics:
+            seed: int = 0, fixed_cut: Optional[int] = None,
+            record_outputs: bool = False) -> JobMetrics:
+        """Run the job. ``fixed_cut`` pins the partition (reference runs /
+        ablations); otherwise the offload controller's plan drives which
+        segment each op executes in, re-partitioning on migration."""
         rng = jax.random.PRNGKey(seed)
-        dec = self.controller.initial_plan(
-            rate_fn(0) if rate_fn else 1e4)
-        self.metrics.decisions.append(f"0:init cut={dec.cut}")
+        dec = self.controller.initial_plan(rate_fn(0) if rate_fn else 1e4)
+        self.cut = fixed_cut if fixed_cut is not None else dec.cut
+        self.metrics.decisions.append(f"0:init cut={self.cut}")
         for step, batch in enumerate(batches):
             t0 = time.perf_counter()
-            x = jnp.asarray(batch.data["x"])
-            y = jnp.asarray(batch.data["y"])
-            (self.norm, self.reservoir, self.moments, xn, mask, rng
-             ) = self._jit_edge(self.norm, self.reservoir, self.moments,
-                                x, y, rng, self.job.sample_rate)
-            (self.model, self.preq, self.det_state, drifted
-             ) = self._jit_cloud(self.model, self.preq, self.det_state,
-                                 xn, y, mask)
-            if bool(drifted):
+            bd = {k: jnp.asarray(v) for k, v in batch.data.items()}
+            bd["rng"] = rng
+            self.states, out = self.pipeline.run(self.states, bd, self.cut)
+            rng = out.get("rng", rng)
+            self.metrics.cuts.append(self.cut)
+            if record_outputs:
+                self.metrics.outputs.append(
+                    {k: np.asarray(v) for k, v in out.items() if k != "rng"})
+            if "drifted" in out and bool(out["drifted"]):
                 self.metrics.drift_alarms += 1
-                self.model = online.logreg_reset_soft(self.model)
+                self._apply_drift_response()
             dt = time.perf_counter() - t0
             rate = batch.n / max(dt, 1e-9)
             self.sla.observe(dt, rate)
@@ -147,6 +135,12 @@ class Orchestrator:
             if d.reason != "hold":
                 self.metrics.decisions.append(
                     f"{step}:{d.reason} cut={d.cut}")
+            if fixed_cut is None and d.cut != self.cut:
+                # migration: re-partition — the next pipeline.run re-fuses
+                # segments for the new cut (compile cache makes revisits free)
+                self.metrics.decisions.append(
+                    f"{step}:repartition {self.cut}->{d.cut}")
+                self.cut = d.cut
             # elastic cloud-pool sizing: grow/shrink the worker count when
             # the offered rate persistently over/under-runs the pool
             plan = self.elastic.observe(step, offered, rate)
@@ -155,9 +149,14 @@ class Orchestrator:
                     f"{step}:elastic-{plan.action} workers={plan.workers} "
                     f"({plan.reason})")
             self.metrics.events += batch.n
-        self.metrics.migrations = self.controller.migrations()
+        # migrations = partition changes that actually EXECUTED (a
+        # fixed_cut reference run reports 0 even when the controller's
+        # virtual plan moved)
+        self.metrics.migrations = sum(
+            1 for a, b in zip(self.metrics.cuts, self.metrics.cuts[1:])
+            if a != b)
         self.metrics.rescales = self.elastic.rescales
         self.metrics.workers = self.elastic.workers
-        self.metrics.preq = mmetrics.preq_metrics(self.preq)
+        self.metrics.preq = self._collect_op_metrics()
         self.metrics.sla = self.sla.report()
         return self.metrics

@@ -1,0 +1,345 @@
+"""Composable operator-graph pipeline IR (S2CE O2): one op list that the
+cost model, placement search, offload controller, and executor all consume,
+so a placement decision *is* an execution plan.
+
+An :class:`Op` declares a pure ``(state, batch) -> (state, batch)`` step
+function (``batch`` is a dict of arrays — a jax pytree), an initial-state
+factory, and the :class:`~repro.core.costmodel.OperatorCost` profile the
+placement optimizer prices it with. A :class:`Pipeline` is an ordered op
+list that can be partitioned at any prefix cut ``k``: ``ops[:k]`` fuse
+into the edge segment and ``ops[k:]`` into the cloud segment, each jitted
+separately. When the offload controller migrates the cut, the segments
+are re-fused; a small compile cache keyed by ``(segment, batch shapes)``
+makes revisiting a cut free.
+
+Cut-invariance: in the default ``fuse="op"`` mode each op is its own XLA
+compilation unit and segments compose the *shared* per-op executables, so
+an op computes bitwise-identically no matter which segment it lands in —
+migrating the cut never perturbs learner state, and every cut reproduces
+the unpartitioned reference exactly (``tests/test_property.py`` checks
+every cut). ``fuse="xla"`` instead jits each segment as one fused XLA
+program (op boundaries pinned with ``lax.optimization_barrier``): higher
+throughput for stable placements, but whole-program fusion context can
+shift reduction codegen by an ulp across cuts, so migrations are only
+allclose, not bitwise — choose it when the placement is expected to be
+static or the learner tolerates ulp-level perturbation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import OperatorCost
+from repro.ml import metrics as mmetrics
+from repro.ml import online
+from repro.streams import drift as drift_mod
+from repro.streams import preprocess as prep
+from repro.streams import sampling as samp
+from repro.streams import sketches as sk
+
+Batch = Dict[str, jax.Array]
+StepFn = Callable[[Any, Batch], Tuple[Any, Batch]]
+
+
+def _no_state():
+    return ()
+
+
+@dataclass(frozen=True)
+class Op:
+    """One pipeline stage: a pure ``(state, batch) -> (state, batch)`` fn
+    plus the cost profile placement prices it with.
+
+    ``on_drift`` (optional) maps state -> state when the orchestrator's
+    drift response fires; ``metrics`` (optional) maps state -> dict for
+    the Output Interface at end of run.
+    """
+    name: str
+    fn: StepFn
+    cost: OperatorCost
+    init: Callable[[], Any] = _no_state
+    on_drift: Optional[Callable[[Any], Any]] = None
+    metrics: Optional[Callable[[Any], dict]] = None
+
+
+class Pipeline:
+    """An ordered list of :class:`Op`, executable under any prefix cut."""
+
+    def __init__(self, ops: Sequence[Op], fuse: str = "op"):
+        ops = tuple(ops)
+        if not ops:
+            raise ValueError("pipeline needs at least one op")
+        names = [op.name for op in ops]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate op names: {names}")
+        if fuse not in ("op", "xla"):
+            raise ValueError(f"fuse mode {fuse!r} not in ('op', 'xla')")
+        self.ops = ops
+        self.fuse = fuse
+        self._segments: Dict[tuple, Callable] = {}   # (lo, hi, sig) -> fn
+        self._op_fns: Dict[int, Callable] = {}       # op idx -> jitted step
+        self.compiles = 0          # cache misses (segment re-fusions)
+        self.cache_hits = 0
+
+    # -- IR views ----------------------------------------------------------
+    @property
+    def names(self) -> List[str]:
+        return [op.name for op in self.ops]
+
+    @property
+    def n_cuts(self) -> int:
+        """Valid cuts are 0..len(ops): ops[:k] edge, ops[k:] cloud."""
+        return len(self.ops) + 1
+
+    def costs(self) -> List[OperatorCost]:
+        """The cost-model view — what placement/offload optimize over."""
+        return [op.cost for op in self.ops]
+
+    def init_states(self) -> Dict[str, Any]:
+        return {op.name: op.init() for op in self.ops}
+
+    def op(self, name: str) -> Op:
+        for o in self.ops:
+            if o.name == name:
+                return o
+        raise KeyError(name)
+
+    # -- partitioned execution ---------------------------------------------
+    @staticmethod
+    def _sig(batch: Batch) -> tuple:
+        return tuple(sorted((k, jnp.shape(v), jnp.result_type(v).name)
+                            for k, v in batch.items()))
+
+    def _op_fn(self, i: int) -> Callable:
+        """The per-op compiled step — shared by every segment that contains
+        op ``i``, which is what makes cut migration bitwise-safe. One jit
+        wrapper per op; jax itself specializes per batch signature."""
+        fn = self._op_fns.get(i)
+        if fn is None:
+            fn = jax.jit(self.ops[i].fn)
+            self._op_fns[i] = fn
+        return fn
+
+    def _fuse_xla(self, lo: int, hi: int) -> Callable:
+        """ops[lo:hi] as one fused XLA program; barriers pin op boundaries
+        (keeps op semantics, but fusion context is still cut-dependent)."""
+        ops = self.ops[lo:hi]
+
+        def segment(states: Dict[str, Any], batch: Batch):
+            states = dict(states)
+            for op in ops:
+                st, batch = op.fn(states[op.name], batch)
+                st, batch = jax.lax.optimization_barrier((st, batch))
+                states[op.name] = st
+            return states, batch
+
+        return jax.jit(segment)
+
+    def _fuse_ops(self, lo: int, hi: int) -> Callable:
+        """ops[lo:hi] as a dispatch-level composition of the shared per-op
+        executables (the default, cut-invariant segment form)."""
+        def segment(states: Dict[str, Any], batch: Batch):
+            states = dict(states)
+            for i in range(lo, hi):
+                op = self.ops[i]
+                st, batch = self._op_fn(i)(states[op.name], batch)
+                states[op.name] = st
+            return states, batch
+
+        return segment
+
+    def _segment_fn(self, lo: int, hi: int, batch: Batch) -> Callable:
+        """Re-fuse (or fetch) the segment for ops[lo:hi] at this batch
+        signature — the compile cache that makes cut revisits free."""
+        key = (lo, hi, self._sig(batch))
+        fn = self._segments.get(key)
+        if fn is None:
+            fn = (self._fuse_xla(lo, hi) if self.fuse == "xla"
+                  else self._fuse_ops(lo, hi))
+            self._segments[key] = fn
+            self.compiles += 1
+        else:
+            self.cache_hits += 1
+        return fn
+
+    def run(self, states: Dict[str, Any], batch: Batch, cut: int
+            ) -> Tuple[Dict[str, Any], Batch]:
+        """Execute under prefix cut ``cut``: ops[:cut] as the edge segment,
+        ops[cut:] as the cloud segment (either may be empty)."""
+        if not 0 <= cut <= len(self.ops):
+            raise ValueError(f"cut {cut} outside [0, {len(self.ops)}]")
+        for lo, hi in ((0, cut), (cut, len(self.ops))):
+            if lo == hi:
+                continue
+            sub = {op.name: states[op.name] for op in self.ops[lo:hi]}
+            fn = self._segment_fn(lo, hi, batch)
+            sub, batch = fn(sub, batch)
+            states = {**states, **sub}
+        return states, batch
+
+    def run_reference(self, states: Dict[str, Any], batch: Batch
+                      ) -> Tuple[Dict[str, Any], Batch]:
+        """Unpartitioned execution: the whole pipeline as one fused jit.
+        Any cut must reproduce this bitwise."""
+        return self.run(states, batch, cut=0)
+
+
+# ---------------------------------------------------------------------------
+# Standard op wrappers around streams/ and ml/ — the same functions the
+# hard-coded orchestrator stages used to call, now declared as IR nodes.
+# ---------------------------------------------------------------------------
+
+def _ev(dim: int) -> float:
+    return 4.0 * dim        # fp32 bytes per event at width `dim`
+
+
+def normalize_op(dim: int) -> Op:
+    """Welford running normalization (edge preprocessing)."""
+    def fn(state, batch):
+        state, xn = prep.norm_update_apply(state, batch["x"])
+        return state, {**batch, "x": xn}
+    cost = OperatorCost("normalize", flops_per_event=50 * dim,
+                        bytes_per_event=4 * _ev(dim),
+                        out_bytes_per_event=_ev(dim))
+    return Op("normalize", fn, cost, init=lambda: prep.norm_init(dim))
+
+
+def sketch_op(dim: int) -> Op:
+    """Streaming moments sketch (edge-side summary)."""
+    def fn(state, batch):
+        return sk.moments_update(state, batch["x"]), batch
+    cost = OperatorCost("sketch", flops_per_event=20 * dim,
+                        bytes_per_event=2 * _ev(dim),
+                        out_bytes_per_event=_ev(dim))
+    return Op("sketch", fn, cost, init=lambda: sk.moments_init(dim))
+
+
+def sample_op(dim: int, rate: float, reservoir_k: int = 256) -> Op:
+    """Reservoir update + Bernoulli thinning; emits the keep `mask` and
+    threads the stream `rng`."""
+    def fn(state, batch):
+        state = samp.reservoir_update(state, batch["x"], batch["y"])
+        mask, rng = samp.bernoulli_thin(batch["rng"], batch["x"], rate)
+        return state, {**batch, "mask": mask, "rng": rng}
+    cost = OperatorCost("sample", flops_per_event=20,
+                        bytes_per_event=2 * _ev(dim),
+                        out_bytes_per_event=_ev(dim) * rate)
+    return Op("sample", fn, cost,
+              init=lambda: samp.reservoir_init(reservoir_k, dim))
+
+
+def logreg_train_op(dim: int, lr: float = 0.5,
+                    flops_per_event: float = 2e6) -> Op:
+    """Prequential test-then-train online logistic regression. Predicts on
+    the full batch, updates on the sampled (masked) rows, and writes the
+    per-event error stream for a downstream drift op."""
+    def fn(state, batch):
+        model, preq = state
+        x, y = batch["x"], batch["y"]
+        p = online.logreg_predict(model, x)
+        err = (jnp.where(p > 0.5, 1, 0) != y).astype(jnp.float32)
+        preq = mmetrics.preq_update(preq, p, y)
+        mask = batch.get("mask", jnp.ones(x.shape[:1], bool))
+        w = mask.astype(jnp.float32)
+        model = online.logreg_update(model, x * w[:, None], y * mask, lr=lr)
+        return (model, preq), {**batch, "p": p, "err": err}
+    # emits model/metric deltas, not events: the uplink-compressing stage.
+    # Cheap rates place it on the edge (a paper-style pre-model); its
+    # 2e6 flops/event saturate the edge pool near 1e6 ev/s, which is what
+    # pushes the cut down (training offloads to cloud) under rate spikes.
+    cost = OperatorCost("train", flops_per_event=flops_per_event,
+                        bytes_per_event=20 * _ev(dim),
+                        out_bytes_per_event=8.0)
+    return Op("train", fn, cost,
+              init=lambda: (online.logreg_init(dim), mmetrics.preq_init()),
+              on_drift=lambda s: (online.logreg_reset_soft(s[0]), s[1]),
+              metrics=lambda s: mmetrics.preq_metrics(s[1]))
+
+
+def drift_op(detector: str = "ddm") -> Op:
+    """Concept-drift detection over the op-emitted error stream. Model
+    management is a cloud concern, so this op is not edge-capable (it
+    also anchors at least one stage on the cloud pool)."""
+    init_fn, step_fn = {
+        "ddm": (drift_mod.ddm_init, drift_mod.ddm_step),
+        "eddm": (drift_mod.eddm_init, drift_mod.eddm_step),
+        "ph": (drift_mod.ph_init, drift_mod.ph_step),
+        "adwin": (drift_mod.adwin_init, drift_mod.adwin_step),
+    }[detector]
+
+    def fn(state, batch):
+        state, levels = jax.lax.scan(step_fn, state, batch["err"])
+        drifted = jnp.any(levels == drift_mod.DRIFT)
+        return state, {**batch, "drifted": drifted}
+    cost = OperatorCost("drift", flops_per_event=50, bytes_per_event=64,
+                        out_bytes_per_event=8, edge_capable=False)
+    return Op("drift", fn, cost, init=init_fn)
+
+
+# -- scenario-diversity ops -------------------------------------------------
+
+def hash_op(dim: int, seed: int = 17) -> Op:
+    """Signed feature hashing: sparse (ids, vals) -> dense x."""
+    def fn(state, batch):
+        x = prep.hash_features(batch["ids"], batch["vals"], dim, seed=seed)
+        out = {k: v for k, v in batch.items() if k not in ("ids", "vals")}
+        return state, {**out, "x": x}
+    cost = OperatorCost("hash", flops_per_event=10 * dim,
+                        bytes_per_event=2 * _ev(dim),
+                        out_bytes_per_event=_ev(dim))
+    return Op("hash", fn, cost)
+
+
+def pca_op(dim: int, k: int, lr: float = 1e-2, seed: int = 0) -> Op:
+    """Streaming PCA (Oja's rule): project x from `dim` to `k` dims."""
+    def fn(state, batch):
+        state, z = prep.oja_update_project(state, batch["x"], lr=lr)
+        return state, {**batch, "x": z}
+    cost = OperatorCost("pca", flops_per_event=4 * dim * k,
+                        bytes_per_event=6 * _ev(dim),
+                        out_bytes_per_event=4.0 * k)
+    return Op("pca", fn, cost, init=lambda: prep.oja_init(dim, k, seed))
+
+
+def concat_op(key: str, out_dim: int) -> Op:
+    """Concatenate a fused column (e.g. a WindowJoin output) onto x —
+    the fusion-fed pipeline entry point."""
+    def fn(state, batch):
+        x = jnp.concatenate([batch["x"], batch[key]], axis=-1)
+        out = {k: v for k, v in batch.items() if k != key}
+        return state, {**out, "x": x}
+    cost = OperatorCost("concat", flops_per_event=2 * out_dim,
+                        bytes_per_event=2 * _ev(out_dim),
+                        out_bytes_per_event=_ev(out_dim))
+    return Op("concat", fn, cost)
+
+
+def anomaly_op(dim: int, m: int = 8, seed: int = 0) -> Op:
+    """Random-projection histogram anomaly scorer; writes `score`."""
+    def fn(state, batch):
+        state = online.anomaly_update(state, batch["x"])
+        score = online.anomaly_score(state, batch["x"])
+        return state, {**batch, "score": score}
+    cost = OperatorCost("anomaly", flops_per_event=2 * dim * m,
+                        bytes_per_event=4 * _ev(dim),
+                        out_bytes_per_event=4.0)
+    return Op("anomaly", fn, cost, init=lambda: online.anomaly_init(dim, m=m,
+                                                                    seed=seed))
+
+
+def standard_stream_pipeline(dim: int, sample_rate: float = 0.5,
+                             drift_detector: str = "ddm",
+                             reservoir_k: int = 256) -> Pipeline:
+    """The default S2CE job: normalize -> sketch -> sample -> train -> drift
+    (the op-graph form of the orchestrator's old hard-coded stages)."""
+    return Pipeline([
+        normalize_op(dim),
+        sketch_op(dim),
+        sample_op(dim, sample_rate, reservoir_k),
+        logreg_train_op(dim),
+        drift_op(drift_detector),
+    ])

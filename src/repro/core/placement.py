@@ -35,11 +35,29 @@ class Objective:
                 + self.uplink_weight * plan.uplink_utilization)
 
 
+def edge_cloud_pools(resources: Dict[str, Resource]
+                     ) -> Tuple[Resource, Resource]:
+    """The (edge, cloud) pool pair prefix-cut placement runs over.
+
+    Explicitly takes the *first* pool of each kind (insertion order) when
+    several are present, and raises a clear ``ValueError`` when either
+    kind is missing — instead of the bare ``StopIteration`` a ``next()``
+    over an ill-formed resource dict used to surface.
+    """
+    edges = [r for r in resources.values() if r.kind == "edge"]
+    clouds = [r for r in resources.values() if r.kind == "cloud"]
+    if not edges or not clouds:
+        kinds = sorted({r.kind for r in resources.values()})
+        raise ValueError(
+            "prefix-cut placement needs at least one 'edge' and one "
+            f"'cloud' pool; resource dict has kinds {kinds or '(empty)'}")
+    return edges[0], clouds[0]
+
+
 def prefix_cut_plans(ops: List[OperatorCost], resources: Dict[str, Resource],
                      rate: float):
     """All plans of the form: stages[:k] on edge, stages[k:] on cloud."""
-    edge = next(r for r in resources.values() if r.kind == "edge")
-    cloud = next(r for r in resources.values() if r.kind == "cloud")
+    edge, cloud = edge_cloud_pools(resources)
     for k in range(len(ops) + 1):
         assign = {op.name: (edge.name if i < k else cloud.name)
                   for i, op in enumerate(ops)}
@@ -59,7 +77,7 @@ def place(ops: List[OperatorCost], resources: Dict[str, Resource],
     if best is None or not best.feasible:
         # all-cloud fallback (always structurally valid; may still be
         # infeasible under extreme rates — caller must check .feasible)
-        cloud = next(r for r in resources.values() if r.kind == "cloud")
+        _, cloud = edge_cloud_pools(resources)
         assign = {op.name: cloud.name for op in ops}
         best = evaluate_plan(ops, assign, resources, rate)
         best_k = 0
@@ -88,7 +106,14 @@ def place_exhaustive(ops: List[OperatorCost], resources: Dict[str, Resource],
 
 def standard_pipeline(dim: int = 32, model_flops_per_event: float = 2e6,
                       sample_rate: float = 0.25) -> List[OperatorCost]:
-    """ingest -> preprocess -> sample/sketch -> pre-model -> full train."""
+    """ingest -> preprocess -> sample/sketch -> pre-model -> full train.
+
+    A synthetic DL-payload cost-list *exemplar* (placement oracle tests,
+    S3 benchmark, edge_cloud example). Executable jobs should not use
+    this: build a :class:`repro.core.pipeline.Pipeline` and price it via
+    ``Pipeline.costs()`` so the optimizer and the executor consume the
+    same op list.
+    """
     ev = 4.0 * dim
     return [
         OperatorCost("ingest", flops_per_event=10 * dim,

@@ -6,7 +6,10 @@ versus fp32 with a per-element error bounded by ``scale/2`` (the
 property suite checks this bound). ``compressed_allreduce_mean`` is
 the collective form: each participant quantizes its local tensor,
 the mean runs over the *dequantized* values, and a scalar error
-estimate rides along for monitoring.
+estimate rides along for monitoring. ``ef_quantize``/``ef_roundtrip``
+add error feedback (residual carry): quantization error is folded into
+the next round's payload instead of being lost, so the accumulated
+error over a stream of updates stays bounded by one quantum.
 """
 
 from __future__ import annotations
@@ -37,6 +40,38 @@ def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
 def int8_roundtrip(x: jax.Array) -> jax.Array:
     """Quantize-dequantize in one step (what the wire does to a tensor)."""
     return dequantize_int8(*quantize_int8(x)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Error feedback (residual carry)
+# ---------------------------------------------------------------------------
+
+def ef_init(x: jax.Array) -> jax.Array:
+    """Zero residual matching ``x`` (always fp32: the carry must not lose
+    precision to the payload dtype)."""
+    return jnp.zeros(jnp.shape(x), jnp.float32)
+
+
+def ef_quantize(residual: jax.Array, x: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback int8 compression step (1-bit/QSGD-style memory).
+
+    The carried residual from previous rounds is folded into the tensor
+    *before* quantizing, and the fresh quantization error is carried
+    forward: ``(q, scale, new_residual)``. Round-to-nearest bias that a
+    plain quantizer accumulates linearly over steps stays bounded by one
+    quantum — the property the test suite checks over 50 steps.
+    """
+    xc = x.astype(jnp.float32) + residual
+    q, scale = quantize_int8(xc)
+    return q, scale, xc - dequantize_int8(q, scale)
+
+
+def ef_roundtrip(residual: jax.Array, x: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Wire round-trip with residual carry: ``(decoded, new_residual)``."""
+    q, scale, residual = ef_quantize(residual, x)
+    return dequantize_int8(q, scale).astype(x.dtype), residual
 
 
 def compressed_allreduce_mean(

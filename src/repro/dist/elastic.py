@@ -82,6 +82,40 @@ def reshard_tree(tree, axes_tree, rules: dict, mesh):
     return jax.tree.map(leaf, tree, axes_tree)
 
 
+def replicated_axes(tree):
+    """Logical-axes tree marking every dim of every leaf unsharded — the
+    ``axes_tree`` to pass :func:`reshard_tree`/:func:`rescale_cycle` for
+    state with no sharding recipe (e.g. optimizer accumulators)."""
+    import jax
+
+    return jax.tree.map(lambda x: tuple(None for _ in np.shape(x)), tree)
+
+
+def rescale_cycle(directory, step: int, tree, axes_tree, rules: dict,
+                  new_workers: int, *, prefer_model: int = 1,
+                  meta: Optional[dict] = None):
+    """Drive a :class:`ScalePlan` through the real state-carrying
+    machinery: ``checkpoint.save -> rebuild_mesh -> reshard_tree`` and
+    hand back the tree resident on the new mesh, ready to resume.
+
+    This is the runtime mechanism behind elastic grow/shrink — the same
+    cycle a failure recovery takes, so a rescale that is not an even
+    re-partition of the old layout (``plan.needs_checkpoint_cycle``)
+    still round-trips safely. Returns ``(tree_on_new_mesh, mesh)``.
+    """
+    import jax
+
+    from repro.dist import checkpoint as ckpt
+
+    ckpt.save(directory, int(step), tree,
+              meta={"workers": int(new_workers), **(meta or {})})
+    restored, _ = ckpt.restore(directory, tree, step=int(step))
+    devices = jax.devices()
+    n = max(1, min(len(devices), int(new_workers) * int(prefer_model)))
+    mesh = rebuild_mesh(devices[:n], prefer_model=prefer_model)
+    return reshard_tree(restored, axes_tree, rules, mesh), mesh
+
+
 # ---------------------------------------------------------------------------
 # Policy: scale decisions
 # ---------------------------------------------------------------------------

@@ -8,6 +8,14 @@ TPU runtime). The step function is identical to the dry-run cells.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
       --steps 50 --batch 8 --seq 64
+
+``--elastic`` activates the rate-driven :class:`ElasticController`; when
+it emits a grow/shrink plan the loop drives it through the real
+state-carrying cycle — ``checkpoint.save -> rebuild_mesh ->
+reshard_tree -> resume`` (dist/elastic.rescale_cycle) — so a rescale
+event goes through the same machinery as a failure recovery.
+``--elastic-demand`` scales the offered rate relative to measured
+per-worker throughput (a synthetic load curve for demos/tests).
 """
 
 from __future__ import annotations
@@ -36,6 +44,13 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--elastic", action="store_true",
+                    help="rate-driven worker scaling via checkpoint cycle")
+    ap.add_argument("--max-workers", type=int, default=8,
+                    help="elastic data-parallel worker cap")
+    ap.add_argument("--elastic-demand", type=float, default=0.0,
+                    help="offered rate = demand x per-worker throughput "
+                         "(0 = use the measured rate)")
     args = ap.parse_args()
 
     # a >1 mesh on a CPU host needs forced host devices, and the flag must
@@ -44,6 +59,8 @@ def main():
     import os
     import re
     n_req = args.data_mesh * args.model_mesh
+    if args.elastic:
+        n_req = max(n_req, args.max_workers * args.model_mesh)
     if n_req > 1:
         flags = os.environ.get("XLA_FLAGS", "")
         m = re.search(r"--xla_force_host_platform_device_count=(\d+)", flags)
@@ -81,7 +98,6 @@ def main():
                       horizon=float(args.steps * args.batch * args.seq))
     opt = make_optimizer(cfg, args.optimizer, lr=args.lr,
                          total_steps=args.steps)
-    step_fn = jax.jit(make_train_step(cfg, opt))
 
     ckpt_dir = pathlib.Path(args.ckpt_dir or tempfile.mkdtemp(prefix="s2ce_"))
     saver = ckpt.AsyncCheckpointer(ckpt_dir)
@@ -96,31 +112,82 @@ def main():
         print(f"resumed from step {start}")
 
     import contextlib
-    ctx = (mesh_context(cfg, args.data_mesh, args.model_mesh)
-           if n_dev > 1 else contextlib.nullcontext())
+
+    from repro.dist import elastic as el
+    from repro.dist.sharding import build_rules
+
+    controller = (el.ElasticController(
+        workers=args.data_mesh, max_workers=args.max_workers,
+        patience=2, cooldown=2) if args.elastic else None)
+    workers = args.data_mesh
+
+    def make_batch(i):
+        batch = {"tokens": jnp.asarray(
+            gen.batch(i, args.batch).data["tokens"])}
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (args.batch, cfg.frontend_len, cfg.frontend_dim),
+                jnp.float32)
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (args.batch, args.seq, cfg.frontend_dim), jnp.float32)
+        return batch
+
     t0 = time.perf_counter()
-    with ctx:
-        for i in range(start, args.steps):
-            batch = {"tokens": jnp.asarray(
-                gen.batch(i, args.batch).data["tokens"])}
-            if cfg.family == "vlm":
-                batch["patches"] = jnp.zeros(
-                    (args.batch, cfg.frontend_len, cfg.frontend_dim),
-                    jnp.float32)
-            if cfg.family == "encdec":
-                batch["frames"] = jnp.zeros(
-                    (args.batch, args.seq, cfg.frontend_dim), jnp.float32)
-            params, state, step, metrics = step_fn(params, state, step, batch)
-            if (i + 1) % args.ckpt_every == 0:
-                saver.save(int(step), {"params": params, "opt": state})
-            if i % 10 == 0:
-                print(f"step {i:4d} loss={float(metrics['loss']):7.3f} "
-                      f"gnorm={float(metrics['grad_norm']):6.2f}")
+    i = start
+    while i < args.steps:
+        # one mesh epoch: (re)trace the step under the current mesh; a
+        # rescale below breaks out, round-trips state, and re-enters here
+        n_dev = workers * args.model_mesh
+        ctx = (mesh_context(cfg, workers, args.model_mesh)
+               if n_dev > 1 else contextlib.nullcontext())
+        step_fn = jax.jit(make_train_step(cfg, opt))
+        plan = None
+        with ctx:
+            while i < args.steps:
+                t_step = time.perf_counter()
+                params, state, step, metrics = step_fn(
+                    params, state, step, make_batch(i))
+                if (i + 1) % args.ckpt_every == 0:
+                    saver.save(int(step), {"params": params, "opt": state})
+                if i % 10 == 0:
+                    print(f"step {i:4d} loss={float(metrics['loss']):7.3f} "
+                          f"gnorm={float(metrics['grad_norm']):6.2f} "
+                          f"workers={workers}")
+                if controller is not None:
+                    jax.block_until_ready(metrics["loss"])
+                    dt_step = max(time.perf_counter() - t_step, 1e-9)
+                    achieved = args.batch * args.seq / dt_step / workers
+                    offered = (args.elastic_demand * achieved
+                               if args.elastic_demand > 0
+                               else achieved * workers)
+                    plan = controller.observe(i, offered, achieved)
+                i += 1
+                if plan is not None and plan.changed:
+                    break
+                plan = None
+        if plan is not None and plan.changed and i < args.steps:
+            # the ROADMAP cycle: save -> rebuild_mesh -> reshard -> resume
+            saver.wait()
+            tree = {"params": params, "opt": state}
+            axes = {"params": zoo.param_axes(cfg),
+                    "opt": el.replicated_axes(state)}
+            tree, mesh = el.rescale_cycle(
+                ckpt_dir, int(step), tree, axes, build_rules(cfg),
+                plan.workers, prefer_model=args.model_mesh,
+                meta={"reason": plan.reason})
+            params, state = tree["params"], tree["opt"]
+            step = jnp.asarray(int(step))   # uncommit from the old mesh
+            workers = plan.workers
+            print(f"elastic {plan.action} -> {workers} workers at step "
+                  f"{int(step)} ({plan.reason}); resumed from checkpoint "
+                  f"cycle on a {tuple(mesh.devices.shape)} mesh")
     saver.wait()
     dt = time.perf_counter() - t0
     toks = (args.steps - start) * args.batch * args.seq
     print(f"done: {toks/dt:.0f} tok/s; checkpoints at {ckpt_dir} "
-          f"(latest {ckpt.latest_step(ckpt_dir)})")
+          f"(latest {ckpt.latest_step(ckpt_dir)}, "
+          f"rescales={controller.rescales if controller else 0})")
 
 
 if __name__ == "__main__":

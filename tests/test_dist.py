@@ -15,7 +15,8 @@ from repro.dist import checkpoint as ckpt
 from repro.dist import elastic
 from repro.dist.api import logical_to_spec
 from repro.dist.compression import (
-    compressed_allreduce_mean, dequantize_int8, quantize_int8,
+    compressed_allreduce_mean, dequantize_int8, ef_init, ef_roundtrip,
+    int8_roundtrip, quantize_int8,
 )
 from repro.dist.sharding import build_rules
 
@@ -131,6 +132,48 @@ def test_compressed_mean_host_side():
     np.testing.assert_allclose(np.asarray(mean), np.asarray(x.mean(0)),
                                atol=2e-2)
     assert float(err) >= 0.0 and np.isfinite(float(err))
+
+
+def test_error_feedback_bounds_accumulated_error():
+    """Residual carry keeps the error of a 50-step accumulated uplink
+    bounded by ~one quantum; plain quantization drifts linearly."""
+    rng = np.random.default_rng(0)
+    # constant-ish gradient: round-to-nearest bias repeats every step
+    g = jnp.asarray(rng.normal(scale=1e-2, size=(128,)).astype(np.float32))
+    plain = jnp.zeros_like(g)
+    ef = jnp.zeros_like(g)
+    residual = ef_init(g)
+    for _ in range(50):
+        plain = plain + int8_roundtrip(g)
+        dec, residual = ef_roundtrip(residual, g)
+        ef = ef + dec
+    true = 50.0 * g
+    err_plain = float(jnp.max(jnp.abs(plain - true)))
+    err_ef = float(jnp.max(jnp.abs(ef - true)))
+    _, scale = quantize_int8(g)
+    assert err_ef < err_plain, (err_ef, err_plain)
+    # EF error never exceeds one carried quantum (scale of the last round)
+    assert err_ef <= 2.0 * float(scale) + 1e-6
+    # while plain accumulates a visible multiple of it
+    assert err_plain > 5.0 * float(scale)
+
+
+def test_rescale_cycle_preserves_values(tmp_path):
+    """save -> rebuild_mesh -> reshard_tree returns the same values on a
+    fresh mesh (the elastic grow/shrink runtime mechanism)."""
+    tree = {"params": {"w": jnp.arange(32.0).reshape(8, 4)},
+            "opt": {"m": jnp.ones((8, 4))}}
+    axes = {"params": {"w": ("embed", "ff")},
+            "opt": elastic.replicated_axes(tree["opt"])}
+    rules = {"param": {"embed": "data", "ff": "model"}, "act": {}}
+    out, mesh = elastic.rescale_cycle(tmp_path, 7, tree, axes, rules,
+                                      new_workers=2)
+    assert mesh.devices.size >= 1
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    np.testing.assert_array_equal(np.asarray(out["opt"]["m"]),
+                                  np.asarray(tree["opt"]["m"]))
+    assert ckpt.latest_step(tmp_path) == 7
 
 
 # ---------------------------------------------------------------------------

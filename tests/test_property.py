@@ -10,6 +10,7 @@ from hypothesis import given, settings, strategies as st
 import jax
 import jax.numpy as jnp
 
+from repro.core import pipeline as pl
 from repro.dist.api import logical_to_spec
 from repro.dist.compression import dequantize_int8, quantize_int8
 from repro.streams import sketches as sk
@@ -93,6 +94,70 @@ def test_welford_matches_two_pass(nbatches, seed):
     var = np.asarray(st_.m2) / max(len(cat) - 1, 1)
     # fp32 single-pass vs float64 two-pass: loose but meaningful bound
     np.testing.assert_allclose(var, cat.var(0, ddof=1), rtol=6e-2, atol=6e-2)
+
+
+def _property_pipeline(kind, dim):
+    if kind == "standard":
+        return pl.standard_stream_pipeline(dim, sample_rate=0.5,
+                                           reservoir_k=16)
+    if kind == "hash_pca":
+        return pl.Pipeline([pl.hash_op(dim), pl.pca_op(dim, 2),
+                            pl.sketch_op(2)])
+    return pl.Pipeline([pl.normalize_op(dim), pl.anomaly_op(dim, m=4),
+                        pl.sketch_op(dim)])
+
+
+def _property_batches(kind, dim, nbatches, seed):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(nbatches):
+        if kind == "hash_pca":
+            out.append({"ids": jnp.asarray(
+                rng.integers(0, 1000, (16, 4)).astype(np.int32)),
+                "vals": jnp.asarray(
+                    rng.normal(size=(16, 4)).astype(np.float32))})
+        else:
+            out.append({"x": jnp.asarray(
+                rng.normal(size=(16, dim)).astype(np.float32)),
+                "y": jnp.asarray(
+                    (rng.random(16) > 0.5).astype(np.int32))})
+    return out
+
+
+@settings(max_examples=8, deadline=None, database=None)
+@given(kind=st.sampled_from(["standard", "hash_pca", "anomaly"]),
+       dim=st.sampled_from([4, 8]),
+       nbatches=st.integers(1, 3),
+       seed=st.integers(0, 1000))
+def test_pipeline_every_cut_bitwise_matches_reference(kind, dim, nbatches,
+                                                      seed):
+    """Partitioning a pipeline at ANY prefix cut — the edge/cloud split the
+    orchestrator migrates at runtime — must reproduce the unpartitioned
+    reference execution bitwise: final states, metrics, and every batch
+    output."""
+    pipe = _property_pipeline(kind, dim)
+    data = _property_batches(kind, dim, nbatches, seed)
+
+    def run(cut):
+        states = pipe.init_states()
+        rng = jax.random.PRNGKey(seed)
+        outs = []
+        for bd in data:
+            bd = dict(bd)
+            bd["rng"] = rng
+            states, out = pipe.run(states, bd, cut)
+            rng = out["rng"]
+            outs.append(out)
+        return states, outs
+
+    ref_states, ref_outs = run(0)
+    for cut in range(1, pipe.n_cuts):
+        states, outs = run(cut)
+        for a, b in zip(jax.tree.leaves((ref_states, ref_outs)),
+                        jax.tree.leaves((states, outs))):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"kind={kind} cut={cut} diverged from reference")
 
 
 @settings(max_examples=20, deadline=None)

@@ -117,6 +117,27 @@ def test_compressed_allreduce_matches_mean():
     assert "COMPRESSED_OK" in out
 
 
+def test_elastic_train_rescales_through_checkpoint_cycle(tmp_path):
+    """`--elastic` drives an ElasticController grow through the real
+    save -> rebuild_mesh -> reshard_tree -> resume cycle mid-training."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen2-1.5b",
+         "--smoke", "--steps", "6", "--batch", "2", "--seq", "16",
+         "--data-mesh", "2", "--elastic", "--elastic-demand", "8",
+         "--max-workers", "4", "--ckpt-every", "50",
+         "--ckpt-dir", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "elastic grow -> 4 workers" in out.stdout, out.stdout
+    assert "resumed from checkpoint cycle" in out.stdout
+    assert "rescales=1" in out.stdout
+    # the cycle left a published checkpoint behind
+    from repro.dist import checkpoint as ckpt
+    assert ckpt.latest_step(tmp_path) is not None
+
+
 def test_dryrun_single_cell_small_mesh():
     """The dry-run machinery on a small in-test mesh: lower+compile a
     reduced arch over (2,4) and extract scan-aware roofline terms."""
