@@ -119,6 +119,38 @@ def bench_pipeline_partition(rows, quick):
                  f"{pipe.cache_hits} cache hits"))
 
 
+def bench_dag_placement(rows, quick):
+    """Tentpole path: frontier-cut (downward-closed) placement search over
+    the fan-out/rejoin example graph vs the exhaustive all-assignments
+    oracle — plans/sec and agreement."""
+    from repro.core import costmodel as cm
+    from repro.core.pipeline import fanout_stream_graph
+    from repro.core.placement import (Objective, place_frontier,
+                                      place_graph_exhaustive)
+    res = {"edge": cm.EDGE_NODE, "cloud": cm.CLOUD_POD}
+    g = fanout_stream_graph(dim=16)
+    n_frontiers = sum(1 for _ in g.frontiers())
+    obj = Objective()
+    iters = 5 if quick else 20
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        plan, frontier = place_frontier(g, res, 1e4, obj)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    rows.append(("dag_place_frontier", us,
+                 f"{n_frontiers} frontiers, "
+                 f"{n_frontiers / us * 1e6:.0f} plans/s, "
+                 f"edge={len(frontier)}/{len(g.names)} ops"))
+    n_assign = 2 ** len(g.names)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        oracle = place_graph_exhaustive(g, res, 1e4, obj)
+    us_o = (time.perf_counter() - t0) / iters * 1e6
+    agree = obj.score(plan) <= obj.score(oracle) * 1.0001
+    rows.append(("dag_place_exhaustive", us_o,
+                 f"{n_assign} assigns, {n_assign / us_o * 1e6:.0f} plans/s, "
+                 f"frontier_matches_oracle={agree}"))
+
+
 def bench_fusion_join(rows, quick):
     """WindowJoin hot path: vectorized as-of join + slice eviction."""
     from repro.streams.events import StreamBatch
@@ -246,7 +278,8 @@ def bench_roofline_summary(rows, quick):
 
 
 ALL_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
-               bench_s3_offload, bench_pipeline_partition, bench_fusion_join,
+               bench_s3_offload, bench_pipeline_partition,
+               bench_dag_placement, bench_fusion_join,
                bench_s4_feature_matrix, bench_generators, bench_sketches,
                bench_train_micro, bench_serve_micro, bench_roofline_summary]
 
@@ -255,8 +288,8 @@ ALL_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
 # the process on any ERROR row so perf-path regressions break CI
 SMOKE_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                  bench_s3_offload, bench_pipeline_partition,
-                 bench_fusion_join, bench_s4_feature_matrix,
-                 bench_generators, bench_sketches]
+                 bench_dag_placement, bench_fusion_join,
+                 bench_s4_feature_matrix, bench_generators, bench_sketches]
 
 
 def main() -> None:

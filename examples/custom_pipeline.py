@@ -1,18 +1,32 @@
-"""Defining custom operator pipelines for the S2CE orchestrator.
+"""Defining custom operator pipelines and DAGs for the S2CE orchestrator.
 
-The pipeline IR (repro/core/pipeline.py) makes the orchestrator's job
+The operator-DAG IR (repro/core/pipeline.py) makes the orchestrator's job
 graph user-composable: every stage is an ``Op`` — a pure
-``(state, batch) -> (state, batch)`` function plus a cost profile — and
-a ``Pipeline`` is an ordered op list the placement optimizer, offload
-controller, and executor all share. Any prefix of the list can run on
-the edge pool; the suffix runs on the cloud pool; the cut is chosen (and
-re-chosen) by the cost model at runtime.
+``(state, batch) -> (state, batch)`` function, a cost profile, and (for
+graph composition) its named channels: the batch keys it reads, writes,
+and deletes. Two containers share one placement/execution machinery:
 
-This example builds three jobs:
+  * ``Pipeline`` — the linear special case: an ordered op list whose
+    cuts are the prefixes ``ops[:k]`` (channel declarations optional);
+  * ``OpGraph`` — a dataflow graph whose dependency edges are inferred
+    from the channel declarations. It partitions at any *frontier*
+    (downward-closed op set): the frontier runs on the edge pool, the
+    rest on the cloud pool, and the cost model prices the uplink per
+    crossing edge. Parallel branches can therefore be split
+    independently — an assignment no prefix cut can express.
+
+The cut/frontier is chosen (and re-chosen) by the cost model at runtime;
+under the default ``fuse="op"`` mode any partition is bitwise-identical
+to the unpartitioned reference.
+
+This example builds four jobs:
 
   1. the standard supervised chain (what ``StreamJob`` defaults to),
   2. an unsupervised hashing -> streaming-PCA -> sketch volume reducer,
-  3. a fully custom op written from scratch (EWMA smoother).
+  3. a fully custom op written from scratch (EWMA smoother),
+  4. the fan-out/rejoin DAG: normalize fans out to {sketch, anomaly,
+     sample -> train -> drift} and the anomaly + learner branches rejoin
+     at an alert head.
 
   PYTHONPATH=src python examples/custom_pipeline.py
 """
@@ -22,8 +36,9 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import pipeline as pl
-from repro.core.costmodel import OperatorCost
+from repro.core.costmodel import CLOUD_POD, EDGE_NODE, OperatorCost
 from repro.core.orchestrator import Orchestrator, StreamJob
+from repro.core.placement import place_frontier, place_graph_exhaustive
 from repro.streams.events import StreamBatch
 from repro.streams.generators import HyperplaneStream
 
@@ -37,6 +52,8 @@ from repro.streams.generators import HyperplaneStream
 #     keys you produce (downstream ops see them).
 #   * init() builds the initial state (any pytree; () if stateless).
 #   * cost describes per-event work so placement can price the op.
+#   * reads/writes declare the op's channels. A linear Pipeline works
+#     without them; an OpGraph requires them (they define the edges).
 # ---------------------------------------------------------------------------
 
 def ewma_op(dim: int, alpha: float = 0.1) -> pl.Op:
@@ -48,7 +65,8 @@ def ewma_op(dim: int, alpha: float = 0.1) -> pl.Op:
     cost = OperatorCost("ewma", flops_per_event=4 * dim,
                         bytes_per_event=8.0 * dim,
                         out_bytes_per_event=4.0 * dim)
-    return pl.Op("ewma", fn, cost, init=lambda: jnp.zeros((dim,)))
+    return pl.Op("ewma", fn, cost, init=lambda: jnp.zeros((dim,)),
+                 reads=("x",), writes=("x",))
 
 
 def main():
@@ -87,6 +105,34 @@ def main():
     m = Orchestrator(StreamJob("custom", dim=dim, pipeline=custom)).run(
         batches, rate_fn=lambda s: 1e4)
     print(f"  accuracy={m.preq['accuracy']:.2f} cuts={sorted(set(m.cuts))}")
+
+    # -- 4. the fan-out/rejoin DAG ----------------------------------------
+    g = pl.fanout_stream_graph(dim, sample_rate=0.5)
+    print("fan-out graph:", " | ".join(
+        f"{n}<-{{{','.join(sorted(g.parents_of(n)))}}}" for n in g.names))
+    n_frontiers = sum(1 for _ in g.frontiers())
+    print(f"  {n_frontiers} downward-closed cuts "
+          f"(a {len(g.names)}-op chain would have {len(g.names) + 1})")
+
+    res = {"edge": EDGE_NODE, "cloud": CLOUD_POD}
+    for rate in (1e3, 1e5, 5e6):
+        plan, frontier = place_frontier(g, res, rate)
+        oracle = place_graph_exhaustive(g, res, rate)
+        note = ("all plans infeasible (rate exceeds uplink); all-cloud "
+                "fallback" if not plan.feasible else
+                f"oracle_assign_match={oracle.assignment == plan.assignment}")
+        print(f"  rate={rate:.0e}: edge={sorted(frontier) or ['-']} "
+              f"uplink={plan.uplink_utilization:.2e} {note}")
+
+    def rate_fn(step):
+        return 1e3 if step < 10 else 5e6     # spike mid-stream
+
+    m = Orchestrator(StreamJob("fanout", dim=dim, pipeline=g)).run(
+        batches, rate_fn=rate_fn)
+    frontiers_seen = sorted({tuple(sorted(f)) for f in m.assignments})
+    print(f"  accuracy={m.preq['accuracy']:.2f} migrations={m.migrations}")
+    for f in frontiers_seen:
+        print(f"    executed frontier: {list(f) or ['(all-cloud)']}")
 
     print("\nOK")
 

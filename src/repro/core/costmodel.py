@@ -10,7 +10,7 @@ are stream-pipeline stages with per-event flops/bytes/output-bytes costs.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
 
@@ -120,11 +120,111 @@ def evaluate_plan(ops: List[OperatorCost], assign: Dict[str, str],
     plan.latency_s = latency
     plan.uplink_utilization = uplink
     plan.energy_w = energy
-    for r, u in per_res_util.items():
+    return _finalize_capacity(plan)
+
+
+def _finalize_capacity(plan: PipelinePlan) -> PipelinePlan:
+    for r, u in plan.utilization.items():
         if u > 1.0:
             plan.feasible = False
             plan.notes.append(f"{r} over capacity ({u:.2f})")
-    if uplink > 1.0:
+    if plan.uplink_utilization > 1.0:
         plan.feasible = False
-        plan.notes.append(f"uplink over capacity ({uplink:.2f})")
+        plan.notes.append(
+            f"uplink over capacity ({plan.uplink_utilization:.2f})")
     return plan
+
+
+def evaluate_graph_plan(ops: List[OperatorCost],
+                        edges: Sequence[Tuple[str, str]],
+                        assign: Dict[str, str],
+                        resources: Dict[str, Resource], rate: float,
+                        source: Optional[str] = None,
+                        source_consumers: Sequence[str] = (),
+                        source_bytes: Optional[float] = None
+                        ) -> PipelinePlan:
+    """Evaluate an operator *DAG*: ``edges`` are the dataflow edges
+    ``(producer, consumer)``; bytes cross the uplink on every edge whose
+    endpoints sit on different resources, priced at the producer's
+    ``out_bytes_per_event`` — per crossing edge, not at one cut point. A
+    producer feeding several consumers on the same remote resource ships
+    its output once per link (multicast), so crossings are grouped by
+    ``(producer, remote resource)``; ``net_latency`` is paid once per
+    distinct resource link (parallel messages share the hop), which for a
+    chain's single cut point is exactly the linear model's one-hop charge.
+
+    ``source`` names the resource the stream originates at (default: the
+    first edge pool, as in :func:`evaluate_plan`); ``source_consumers``
+    are the ops that read raw-stream channels no op produces, and the raw
+    event (``source_bytes``) is shipped once to every remote resource one
+    of them sits on — an all-cloud plan pays the raw-event uplink.
+
+    Backhaul is not a supported data path: a flow edge from a cloud pool
+    down to an edge pool (routing a high-rate stream back over the
+    constrained link so a *slower* node can consume it) marks the plan
+    infeasible. Feasible assignments are therefore exactly the
+    downward-closed frontier cuts, which is what makes the frontier
+    search provably complete against the exhaustive oracle.
+
+    For a chain (edges = consecutive pairs, source consumed by the first
+    op) this reproduces :func:`evaluate_plan` exactly on any
+    backhaul-free assignment.
+    """
+    if source is None:
+        source = next((r.name for r in resources.values()
+                       if r.kind == "edge"), "")
+    by_name = {op.name: op for op in ops}
+    plan = PipelinePlan(dict(assign))
+    latency = 0.0
+    energy = 0.0
+    uplink = 0.0
+    per_res_util: Dict[str, float] = {r: 0.0 for r in resources}
+    for op in ops:
+        res = resources[assign[op.name]]
+        if not op.edge_capable and res.kind == "edge":
+            plan.feasible = False
+            plan.notes.append(f"{op.name} not edge-capable")
+        u = stage_time(op, res, rate)
+        per_res_util[res.name] = per_res_util.get(res.name, 0.0) + u
+        latency += op.flops_per_event / res.total_flops
+        energy += u * res.energy_w * res.chips
+        if op.state_bytes > res.mem_cap * res.chips:
+            plan.feasible = False
+            plan.notes.append(f"{op.name} state exceeds {res.name} memory")
+    # Bytes are charged per crossing edge (bandwidth is consumed per
+    # message), but net_latency once per distinct resource *link*: all
+    # crossings of one uplink ride it in parallel, not serially.
+    links = set()
+    # the raw stream crosses once to every remote pool a source-consuming
+    # op was placed on
+    if source:
+        sb = (source_bytes if source_bytes is not None else
+              max((by_name[c].bytes_per_event for c in source_consumers),
+                  default=0.0))
+        src = resources[source]
+        for rname in sorted({assign[c] for c in source_consumers
+                             if assign[c] != source}):
+            res = resources[rname]
+            slow = src if src.net_bw < res.net_bw else res
+            uplink += transfer_time(sb, rate, slow)
+            links.add(frozenset((source, rname)))
+    # each crossing edge ships the producer's output on the slower side
+    crossings = sorted({(p, assign[c]) for p, c in edges
+                        if assign[p] != assign[c]})
+    for p, rname in crossings:
+        rp, rc = resources[assign[p]], resources[rname]
+        if rp.kind == "cloud" and rc.kind == "edge":
+            plan.feasible = False
+            plan.notes.append(f"backhaul {p}->{rname} (cloud->edge) "
+                              "not supported")
+        slow = rp if rp.net_bw < rc.net_bw else rc
+        uplink += transfer_time(by_name[p].out_bytes_per_event, rate, slow)
+        links.add(frozenset((rp.name, rname)))
+    for link in links:
+        slow = min((resources[r] for r in link), key=lambda r: r.net_bw)
+        latency += slow.net_latency
+    plan.utilization = per_res_util
+    plan.latency_s = latency
+    plan.uplink_utilization = uplink
+    plan.energy_w = energy
+    return _finalize_capacity(plan)

@@ -5,15 +5,23 @@ event rate leaves the band the current plan was built for, or the SLA
 tracker reports violations. Replanning uses the same cost model as static
 placement; hysteresis (enter/exit thresholds + cooldown) prevents
 thrashing when the rate oscillates around a cut point.
+
+Decisions carry the full *assignment* — the ``frontier``: the
+downward-closed set of op names resident on the edge — not just a cut
+index. For a linear pipeline the frontier is exactly the prefix
+``ops[:cut]`` and ``cut`` keeps its old meaning; for an operator DAG the
+frontier can hold parallel branches independently and ``cut`` reports its
+size. Hysteresis and the migration count key on frontier *identity* (the
+plan actually changing where ops run), not on the scalar index.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, FrozenSet, List, Optional
 
 from repro.core.costmodel import OperatorCost, PipelinePlan, Resource
-from repro.core.placement import Objective, place
+from repro.core.placement import Objective, place, place_frontier
 from repro.core.sla import SLATracker
 
 
@@ -21,9 +29,10 @@ from repro.core.sla import SLATracker
 class OffloadDecision:
     step: int
     rate: float
-    cut: int                 # stages[:cut] on edge
+    cut: int                 # edge-resident op count (prefix cut if linear)
     reason: str
     plan: PipelinePlan
+    frontier: FrozenSet[str] = frozenset()   # op names on the edge
 
 
 @dataclass
@@ -31,17 +40,29 @@ class OffloadController:
     ops: List[OperatorCost]
     resources: Dict[str, Resource]
     objective: Objective = field(default_factory=Objective)
+    # an OpGraph to plan over frontier cuts; None -> prefix cuts over `ops`
+    graph: Optional[object] = None
     headroom: float = 1.3      # replan when rate moves x1.3 outside band
     cooldown: int = 5          # min decisions between migrations
     planned_rate: float = 0.0
     cut: int = 0
+    frontier: FrozenSet[str] = frozenset()
     _last_change: int = -10**9
     history: List[OffloadDecision] = field(default_factory=list)
 
-    def initial_plan(self, rate: float) -> OffloadDecision:
+    def _plan(self, rate: float):
+        if self.graph is not None:
+            plan, frontier = place_frontier(self.graph, self.resources,
+                                            rate, self.objective)
+            return plan, frontier
         plan, cut = place(self.ops, self.resources, rate, self.objective)
-        self.planned_rate, self.cut = rate, cut
-        d = OffloadDecision(0, rate, cut, "initial", plan)
+        return plan, frozenset(op.name for op in self.ops[:cut])
+
+    def initial_plan(self, rate: float) -> OffloadDecision:
+        plan, frontier = self._plan(rate)
+        self.planned_rate, self.frontier = rate, frontier
+        self.cut = len(frontier)
+        d = OffloadDecision(0, rate, self.cut, "initial", plan, frontier)
         self.history.append(d)
         return d
 
@@ -54,18 +75,19 @@ class OffloadController:
         if (not out_of_band and not sla_bad) or \
                 step - self._last_change < self.cooldown:
             d = OffloadDecision(step, rate, self.cut, "hold",
-                                self.history[-1].plan)
+                                self.history[-1].plan, self.frontier)
             return d
-        plan, cut = place(self.ops, self.resources, rate, self.objective)
+        plan, frontier = self._plan(rate)
         reason = "sla" if sla_bad else (
             "rate_up" if rate > self.planned_rate else "rate_down")
-        if cut != self.cut:
+        if frontier != self.frontier:
             self._last_change = step
-        self.planned_rate, self.cut = rate, cut
-        d = OffloadDecision(step, rate, cut, reason, plan)
+        self.planned_rate, self.frontier = rate, frontier
+        self.cut = len(frontier)
+        d = OffloadDecision(step, rate, self.cut, reason, plan, frontier)
         self.history.append(d)
         return d
 
     def migrations(self) -> int:
-        cuts = [d.cut for d in self.history]
-        return sum(1 for a, b in zip(cuts, cuts[1:]) if a != b)
+        fs = [d.frontier for d in self.history]
+        return sum(1 for a, b in zip(fs, fs[1:]) if a != b)

@@ -1,18 +1,23 @@
 """The S2CE orchestrator: one object that wires the paper's Fig. 2 together.
 
-A :class:`StreamJob` declares sources, the transformation pipeline (any
-:class:`~repro.core.pipeline.Pipeline` — the default is the classic
+A :class:`StreamJob` declares sources, the transformation pipeline (a
+linear :class:`~repro.core.pipeline.Pipeline` or a fan-out/rejoin
+:class:`~repro.core.pipeline.OpGraph` — the default is the classic
 normalize -> sketch -> sample -> train -> drift chain), the ML payload,
 and an SLA. The orchestrator:
 
-  1. costs the pipeline's op list and *places* it on cloud/edge pools
+  1. costs the pipeline's op graph and *places* it on cloud/edge pools
      (core/placement) — the same op list the executor runs,
-  2. executes the planned partition: ops[:cut] as the edge segment,
-     ops[cut:] as the cloud segment (core/pipeline),
+  2. executes the planned partition: the frontier (downward-closed op
+     set; a prefix for linear pipelines) as the edge segment, the rest
+     as the cloud segment (core/pipeline),
   3. monitors rate + SLA, *re-plans* via the offload controller, and
-     re-partitions the pipeline when the cut migrates,
+     re-partitions the graph when the assignment migrates,
   4. reacts to drift alarms through each op's declared drift response,
-  5. exposes metrics for the Output Interface.
+  5. drives elastic grow/shrink plans through the real state-carrying
+     ``elastic.rescale_cycle`` (checkpoint.save -> rebuild_mesh ->
+     reshard_tree -> resume — the same path failure recovery takes),
+  6. exposes metrics for the Output Interface.
 
 Because segments are composed from shared per-op executables (see
 core/pipeline), a migration changes *where* ops run without perturbing
@@ -21,9 +26,10 @@ core/pipeline), a migration changes *where* ops run without perturbing
 
 from __future__ import annotations
 
+import tempfile
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, FrozenSet, Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,10 +37,10 @@ import numpy as np
 
 from repro.core.costmodel import CLOUD_POD, EDGE_NODE, Resource
 from repro.core.offload import OffloadController
-from repro.core.pipeline import Pipeline, standard_stream_pipeline
+from repro.core.pipeline import OpGraph, Pipeline, standard_stream_pipeline
 from repro.core.placement import Objective
 from repro.core.sla import SLA, SLATracker
-from repro.dist.elastic import ElasticController
+from repro.dist import elastic
 
 
 @dataclass
@@ -48,11 +54,14 @@ class StreamJob:
     edge_resource: Resource = EDGE_NODE
     cloud_resource: Resource = CLOUD_POD
     objective: Objective = field(default_factory=Objective)
-    # user-supplied operator graph; None -> the standard S2CE chain
-    pipeline: Optional[Pipeline] = None
+    # user-supplied operator graph (linear Pipeline or fan-out OpGraph);
+    # None -> the standard S2CE chain
+    pipeline: Optional[OpGraph] = None
     # elastic cloud-pool sizing (dist/elastic): starting worker count and cap
     workers: int = 1
     max_workers: int = 16
+    # where elastic rescale cycles publish checkpoints; None -> a tempdir
+    ckpt_dir: Optional[str] = None
 
 
 @dataclass
@@ -65,7 +74,9 @@ class JobMetrics:
     preq: Optional[dict] = None
     sla: Optional[dict] = None
     decisions: List[str] = field(default_factory=list)
-    cuts: List[int] = field(default_factory=list)        # cut per batch
+    cuts: List[int] = field(default_factory=list)        # |frontier| per batch
+    # assignment record per batch: the frozenset of edge-resident op names
+    assignments: List[FrozenSet[str]] = field(default_factory=list)
     outputs: List[dict] = field(default_factory=list)    # when recording
 
 
@@ -79,16 +90,22 @@ class Orchestrator:
         self.pipeline = job.pipeline or standard_stream_pipeline(
             job.dim, sample_rate=job.sample_rate,
             drift_detector=job.drift_detector)
+        # a Pipeline partitions at prefix cuts (plans identical to the
+        # linear IR); any other OpGraph partitions at frontier cuts
+        self.is_graph = not isinstance(self.pipeline, Pipeline)
         # the cost model prices the SAME op list the executor runs
         self.ops = self.pipeline.costs()
-        self.controller = OffloadController(self.ops, self.resources,
-                                            job.objective)
+        self.controller = OffloadController(
+            self.ops, self.resources, job.objective,
+            graph=self.pipeline if self.is_graph else None)
         self.sla = SLATracker(job.sla)
-        self.elastic = ElasticController(workers=job.workers,
-                                         max_workers=job.max_workers)
+        self.elastic = elastic.ElasticController(workers=job.workers,
+                                                 max_workers=job.max_workers)
         self.states = self.pipeline.init_states()
         self.cut = 0
+        self.frontier: FrozenSet[str] = frozenset()
         self.metrics = JobMetrics()
+        self._ckpt_dir = job.ckpt_dir
 
     # -- drift response: each op declares its own -------------------------
     def _apply_drift_response(self):
@@ -103,24 +120,58 @@ class Orchestrator:
                 out.update(op.metrics(self.states[op.name]))
         return out or None
 
+    # -- elastic rescale: the ROADMAP save->rebuild->reshard->resume cycle --
+    def _apply_rescale(self, step: int, plan) -> None:
+        """Drive an elastic grow/shrink through ``elastic.rescale_cycle``:
+        the op states round-trip a published checkpoint and come back
+        resident (replicated) on the rebuilt mesh — the same machinery a
+        failure recovery takes, so values are preserved bitwise."""
+        if self._ckpt_dir is None:
+            self._ckpt_dir = tempfile.mkdtemp(
+                prefix=f"s2ce-{self.job.name}-elastic-")
+        axes = elastic.replicated_axes(self.states)
+        self.states, mesh = elastic.rescale_cycle(
+            self._ckpt_dir, step, self.states, axes, {}, plan.workers,
+            meta={"reason": plan.reason, "job": self.job.name}, keep=2)
+        self.metrics.decisions.append(
+            f"{step}:elastic-{plan.action} workers={plan.workers} "
+            f"mesh={tuple(mesh.devices.shape)} ({plan.reason})")
+
     # -- main loop ----------------------------------------------------------
     def run(self, batches, rate_fn: Optional[Callable[[int], float]] = None,
             seed: int = 0, fixed_cut: Optional[int] = None,
+            fixed_frontier: Optional[Iterable[str]] = None,
             record_outputs: bool = False) -> JobMetrics:
-        """Run the job. ``fixed_cut`` pins the partition (reference runs /
-        ablations); otherwise the offload controller's plan drives which
-        segment each op executes in, re-partitioning on migration."""
-        rng = jax.random.PRNGKey(seed)
+        """Run the job. ``fixed_cut`` (linear) or ``fixed_frontier`` (DAG)
+        pins the partition (reference runs / ablations); otherwise the
+        offload controller's plan drives which segment each op executes
+        in, re-partitioning on migration."""
+        root_rng = jax.random.PRNGKey(seed)
         dec = self.controller.initial_plan(rate_fn(0) if rate_fn else 1e4)
-        self.cut = fixed_cut if fixed_cut is not None else dec.cut
+        if fixed_frontier is not None:
+            self.frontier = self.pipeline.check_frontier(fixed_frontier)
+        elif fixed_cut is not None:
+            self.frontier = frozenset(self.pipeline.names[:fixed_cut])
+        else:
+            self.frontier = dec.frontier
+        pinned = fixed_cut is not None or fixed_frontier is not None
+        self.cut = len(self.frontier)
         self.metrics.decisions.append(f"0:init cut={self.cut}")
         for step, batch in enumerate(batches):
             t0 = time.perf_counter()
             bd = {k: jnp.asarray(v) for k, v in batch.data.items()}
-            bd["rng"] = rng
-            self.states, out = self.pipeline.run(self.states, bd, self.cut)
-            rng = out.get("rng", rng)
+            # a fresh per-step key: pipelines with no rng-threading op used
+            # to see the SAME key every batch (stale-RNG bug); splitting
+            # here makes randomness advance regardless of the op set
+            bd["rng"] = jax.random.fold_in(root_rng, step)
+            if self.is_graph:
+                self.states, out = self.pipeline.run(self.states, bd,
+                                                     self.frontier)
+            else:
+                self.states, out = self.pipeline.run(self.states, bd,
+                                                     self.cut)
             self.metrics.cuts.append(self.cut)
+            self.metrics.assignments.append(self.frontier)
             if record_outputs:
                 self.metrics.outputs.append(
                     {k: np.asarray(v) for k, v in out.items() if k != "rng"})
@@ -135,25 +186,27 @@ class Orchestrator:
             if d.reason != "hold":
                 self.metrics.decisions.append(
                     f"{step}:{d.reason} cut={d.cut}")
-            if fixed_cut is None and d.cut != self.cut:
+            if not pinned and d.frontier != self.frontier:
                 # migration: re-partition — the next pipeline.run re-fuses
                 # segments for the new cut (compile cache makes revisits free)
                 self.metrics.decisions.append(
-                    f"{step}:repartition {self.cut}->{d.cut}")
-                self.cut = d.cut
+                    f"{step}:repartition {self.cut}->{d.cut} "
+                    f"edge={sorted(d.frontier)}")
+                self.frontier = d.frontier
+                self.cut = len(d.frontier)
             # elastic cloud-pool sizing: grow/shrink the worker count when
-            # the offered rate persistently over/under-runs the pool
+            # the offered rate persistently over/under-runs the pool; a
+            # changed plan is DRIVEN through the checkpoint rescale cycle
             plan = self.elastic.observe(step, offered, rate)
             if plan.changed:
-                self.metrics.decisions.append(
-                    f"{step}:elastic-{plan.action} workers={plan.workers} "
-                    f"({plan.reason})")
+                self._apply_rescale(step, plan)
             self.metrics.events += batch.n
-        # migrations = partition changes that actually EXECUTED (a
-        # fixed_cut reference run reports 0 even when the controller's
-        # virtual plan moved)
+        # migrations = partition changes that actually EXECUTED (a pinned
+        # reference run reports 0 even when the controller's virtual plan
+        # moved)
         self.metrics.migrations = sum(
-            1 for a, b in zip(self.metrics.cuts, self.metrics.cuts[1:])
+            1 for a, b in zip(self.metrics.assignments,
+                              self.metrics.assignments[1:])
             if a != b)
         self.metrics.rescales = self.elastic.rescales
         self.metrics.workers = self.elastic.workers

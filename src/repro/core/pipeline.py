@@ -1,34 +1,50 @@
-"""Composable operator-graph pipeline IR (S2CE O2): one op list that the
-cost model, placement search, offload controller, and executor all consume,
-so a placement decision *is* an execution plan.
+"""Operator-DAG pipeline IR (S2CE O2): one dataflow graph that the cost
+model, placement search, offload controller, and executor all consume, so
+a placement decision *is* an execution plan.
 
 An :class:`Op` declares a pure ``(state, batch) -> (state, batch)`` step
 function (``batch`` is a dict of arrays — a jax pytree), an initial-state
-factory, and the :class:`~repro.core.costmodel.OperatorCost` profile the
-placement optimizer prices it with. A :class:`Pipeline` is an ordered op
-list that can be partitioned at any prefix cut ``k``: ``ops[:k]`` fuse
-into the edge segment and ``ops[k:]`` into the cloud segment, each jitted
-separately. When the offload controller migrates the cut, the segments
-are re-fused; a small compile cache keyed by ``(segment, batch shapes)``
-makes revisiting a cut free.
+factory, the :class:`~repro.core.costmodel.OperatorCost` profile the
+placement optimizer prices it with, and — for DAG composition — its named
+I/O channels: the batch keys it ``reads``, ``writes``, and ``deletes``.
+
+An :class:`OpGraph` is a dataflow graph over such ops. Dependency edges
+are inferred from the channel declarations (producer -> consumer for each
+read key, plus write-after-read/write hazards), so fused sources can fan
+out to parallel sketches, samplers, and learners whose outputs rejoin —
+the Fig. 2 workflow shapes a linear chain cannot express. The graph is
+partitioned at any *downward-closed cut set* ("frontier"): a set of ops
+that contains all of its own ancestors runs on the edge, its upward-closed
+complement on the cloud, and the cost model prices the uplink per crossing
+edge (``out_bytes_per_event`` of each edge-side producer feeding a cloud
+consumer) instead of at one cut point.
+
+:class:`Pipeline` is retained as the linear special case: an ordered op
+list whose frontiers are exactly the prefix cuts ``ops[:k]``, with the
+same ``run(states, batch, cut)`` API, prefix-cut placement, and plan
+costs as before — every existing call site keeps working unchanged.
 
 Cut-invariance: in the default ``fuse="op"`` mode each op is its own XLA
 compilation unit and segments compose the *shared* per-op executables, so
 an op computes bitwise-identically no matter which segment it lands in —
-migrating the cut never perturbs learner state, and every cut reproduces
-the unpartitioned reference exactly (``tests/test_property.py`` checks
-every cut). ``fuse="xla"`` instead jits each segment as one fused XLA
-program (op boundaries pinned with ``lax.optimization_barrier``): higher
-throughput for stable placements, but whole-program fusion context can
-shift reduction codegen by an ulp across cuts, so migrations are only
-allclose, not bitwise — choose it when the placement is expected to be
-static or the learner tolerates ulp-level perturbation.
+migrating the frontier never perturbs learner state, and every
+downward-closed cut reproduces the unpartitioned reference exactly
+(``tests/test_property.py`` checks every cut). ``OpGraph`` additionally
+restricts each op's input dict to its declared ``reads``, so the per-op
+executable sees the same input signature under every frontier.
+``fuse="xla"`` instead jits each segment as one fused XLA program (op
+boundaries pinned with ``lax.optimization_barrier``): higher throughput
+for stable placements, but whole-program fusion context can shift
+reduction codegen by an ulp across cuts, so migrations are only allclose,
+not bitwise — choose it when the placement is expected to be static or
+the learner tolerates ulp-level perturbation.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, FrozenSet, Iterable, Iterator, List,
+                    Optional, Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +70,12 @@ class Op:
     """One pipeline stage: a pure ``(state, batch) -> (state, batch)`` fn
     plus the cost profile placement prices it with.
 
+    ``reads``/``writes``/``deletes`` declare the op's named channels —
+    the batch keys it consumes, produces, and removes. :class:`OpGraph`
+    requires them (they define the dataflow edges); :class:`Pipeline`
+    treats an undeclared op conservatively as reading and writing
+    everything, which is exactly the linear-chain dependency structure.
+
     ``on_drift`` (optional) maps state -> state when the orchestrator's
     drift response fires; ``metrics`` (optional) maps state -> dict for
     the Output Interface at end of run.
@@ -64,15 +86,40 @@ class Op:
     init: Callable[[], Any] = _no_state
     on_drift: Optional[Callable[[Any], Any]] = None
     metrics: Optional[Callable[[Any], dict]] = None
+    reads: Optional[Tuple[str, ...]] = None
+    writes: Optional[Tuple[str, ...]] = None
+    deletes: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        for f in ("reads", "writes", "deletes"):
+            v = getattr(self, f)
+            if v is not None and not isinstance(v, tuple):
+                object.__setattr__(self, f, tuple(v))
 
 
-class Pipeline:
-    """An ordered list of :class:`Op`, executable under any prefix cut."""
+class OpGraph:
+    """A dataflow graph of :class:`Op`, executable under any frontier cut.
+
+    Ops are given in a topological list order (the reference execution
+    order); every op must declare its channels. Dependencies are inferred
+    per key with full hazard analysis over that order:
+
+      * true dependency — the last writer of a key feeds each reader
+        (these are the *flow edges* the cost model prices bytes on),
+      * anti dependency — a reader must precede the key's next writer,
+      * output dependency — writers of the same key stay ordered.
+
+    A *frontier* is a downward-closed op set (every member's dependencies
+    are members): the edge-resident part of a partition. Executing the
+    edge segment then the cloud segment is then a valid topological
+    linearization, so any frontier reproduces the reference bitwise under
+    ``fuse="op"``.
+    """
 
     def __init__(self, ops: Sequence[Op], fuse: str = "op"):
         ops = tuple(ops)
         if not ops:
-            raise ValueError("pipeline needs at least one op")
+            raise ValueError("graph needs at least one op")
         names = [op.name for op in ops]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate op names: {names}")
@@ -80,20 +127,78 @@ class Pipeline:
             raise ValueError(f"fuse mode {fuse!r} not in ('op', 'xla')")
         self.ops = ops
         self.fuse = fuse
-        self._segments: Dict[tuple, Callable] = {}   # (lo, hi, sig) -> fn
+        self._segments: Dict[tuple, Callable] = {}   # (idxs, sig) -> fn
         self._op_fns: Dict[int, Callable] = {}       # op idx -> jitted step
         self.compiles = 0          # cache misses (segment re-fusions)
         self.cache_hits = 0
+        self._build_deps()
+
+    # -- dependency inference ----------------------------------------------
+    def _build_deps(self):
+        undeclared = [op.name for op in self.ops
+                      if op.reads is None or op.writes is None]
+        if undeclared:
+            raise ValueError(
+                f"OpGraph ops must declare reads/writes channels; missing "
+                f"on: {undeclared} (use Pipeline for undeclared linear "
+                f"chains)")
+        parents: List[set] = [set() for _ in self.ops]
+        flow: set = set()
+        last_writer: Dict[str, int] = {}
+        readers: Dict[str, set] = {}
+        source_reads: List[str] = []
+        source_consumers: List[str] = []
+        all_writers: Dict[str, int] = {}
+        for j, op in enumerate(self.ops):
+            for k in op.writes + op.deletes:
+                all_writers.setdefault(k, j)
+        for j, op in enumerate(self.ops):
+            for k in op.reads:
+                i = last_writer.get(k)
+                if i is None:
+                    w = all_writers.get(k)
+                    if w is not None and w != j:
+                        raise ValueError(
+                            f"op {op.name!r} reads channel {k!r} which is "
+                            f"only written by the later op "
+                            f"{self.ops[w].name!r}; order ops topologically")
+                    if k not in source_reads:
+                        source_reads.append(k)
+                    if op.name not in source_consumers:
+                        source_consumers.append(op.name)
+                else:
+                    parents[j].add(i)
+                    flow.add((i, j))
+                readers.setdefault(k, set()).add(j)
+            for k in op.writes + op.deletes:
+                i = last_writer.get(k)
+                if i is not None and i != j:
+                    parents[j].add(i)              # write-after-write
+                for r in readers.get(k, ()):
+                    if r != j:
+                        parents[j].add(r)          # write-after-read
+                last_writer[k] = j
+                readers[k] = set()
+        self._parents: Tuple[FrozenSet[int], ...] = tuple(
+            frozenset(p) for p in parents)
+        self.flow_edges: Tuple[Tuple[str, str], ...] = tuple(sorted(
+            (self.ops[i].name, self.ops[j].name) for i, j in flow))
+        self.source_reads = tuple(source_reads)
+        self.source_consumers = tuple(source_consumers)
+
+    @property
+    def source_bytes_per_event(self) -> float:
+        """Raw-event size the source crossing is priced at: the first
+        source-consuming op's input traffic (for a chain this is
+        ``ops[0].bytes_per_event`` — the linear model's charge)."""
+        if not self.source_consumers:
+            return 0.0
+        return self.op(self.source_consumers[0]).cost.bytes_per_event
 
     # -- IR views ----------------------------------------------------------
     @property
     def names(self) -> List[str]:
         return [op.name for op in self.ops]
-
-    @property
-    def n_cuts(self) -> int:
-        """Valid cuts are 0..len(ops): ops[:k] edge, ops[k:] cloud."""
-        return len(self.ops) + 1
 
     def costs(self) -> List[OperatorCost]:
         """The cost-model view — what placement/offload optimize over."""
@@ -108,6 +213,45 @@ class Pipeline:
                 return o
         raise KeyError(name)
 
+    def parents_of(self, name: str) -> FrozenSet[str]:
+        i = self.names.index(name)
+        return frozenset(self.ops[p].name for p in self._parents[i])
+
+    # -- frontier cuts ------------------------------------------------------
+    def check_frontier(self, frontier: Iterable[str]) -> FrozenSet[str]:
+        """Validate ``frontier`` is a known, downward-closed op set."""
+        f = frozenset(frontier)
+        unknown = f - set(self.names)
+        if unknown:
+            raise ValueError(f"unknown ops in frontier: {sorted(unknown)}")
+        idx = {op.name: i for i, op in enumerate(self.ops)}
+        for name in f:
+            for p in self._parents[idx[name]]:
+                if self.ops[p].name not in f:
+                    raise ValueError(
+                        f"frontier not downward-closed: {name!r} depends on "
+                        f"{self.ops[p].name!r} which is not in the frontier")
+        return f
+
+    def frontiers(self) -> Iterator[FrozenSet[str]]:
+        """Enumerate every downward-closed cut set (edge-side op set).
+        For a chain these are exactly the ``n+1`` prefixes."""
+        n = len(self.ops)
+        names = self.names
+        parents = self._parents
+
+        def rec(i: int, cur: set) -> Iterator[FrozenSet[str]]:
+            if i == n:
+                yield frozenset(names[j] for j in cur)
+                return
+            yield from rec(i + 1, cur)          # op i on the cloud side
+            if parents[i] <= cur:               # edge only if deps on edge
+                cur.add(i)
+                yield from rec(i + 1, cur)
+                cur.remove(i)
+
+        yield from rec(0, set())
+
     # -- partitioned execution ---------------------------------------------
     @staticmethod
     def _sig(batch: Batch) -> tuple:
@@ -116,55 +260,150 @@ class Pipeline:
 
     def _op_fn(self, i: int) -> Callable:
         """The per-op compiled step — shared by every segment that contains
-        op ``i``, which is what makes cut migration bitwise-safe. One jit
-        wrapper per op; jax itself specializes per batch signature."""
+        op ``i``, which is what makes frontier migration bitwise-safe. One
+        jit wrapper per op; jax itself specializes per batch signature."""
         fn = self._op_fns.get(i)
         if fn is None:
             fn = jax.jit(self.ops[i].fn)
             self._op_fns[i] = fn
         return fn
 
-    def _fuse_xla(self, lo: int, hi: int) -> Callable:
-        """ops[lo:hi] as one fused XLA program; barriers pin op boundaries
-        (keeps op semantics, but fusion context is still cut-dependent)."""
-        ops = self.ops[lo:hi]
+    def _apply(self, i: int, states: Dict[str, Any], env: Batch,
+               call: Optional[Callable] = None
+               ) -> Tuple[Dict[str, Any], Batch]:
+        """Run op ``i`` with channel semantics: feed only its declared
+        ``reads`` (the per-op input signature is therefore identical under
+        every frontier), merge back only its declared ``writes``, and drop
+        its ``deletes``."""
+        op = self.ops[i]
+        inb = {k: env[k] for k in op.reads if k in env}
+        st, out = (call or self._op_fn(i))(states[op.name], inb)
+        states[op.name] = st
+        if op.deletes:
+            env = {k: v for k, v in env.items() if k not in op.deletes}
+        else:
+            env = dict(env)
+        env.update({k: out[k] for k in op.writes if k in out})
+        return states, env
 
-        def segment(states: Dict[str, Any], batch: Batch):
+    def _fuse_xla(self, idxs: Tuple[int, ...]) -> Callable:
+        """The segment as one fused XLA program; barriers pin op boundaries
+        (keeps op semantics, but fusion context is still cut-dependent)."""
+        def segment(states: Dict[str, Any], env: Batch):
             states = dict(states)
-            for op in ops:
-                st, batch = op.fn(states[op.name], batch)
-                st, batch = jax.lax.optimization_barrier((st, batch))
-                states[op.name] = st
-            return states, batch
+            for i in idxs:
+                states, env = self._apply(i, states, env,
+                                          call=self.ops[i].fn)
+                st, env = jax.lax.optimization_barrier(
+                    (states[self.ops[i].name], env))
+                states[self.ops[i].name] = st
+            return states, env
 
         return jax.jit(segment)
 
-    def _fuse_ops(self, lo: int, hi: int) -> Callable:
-        """ops[lo:hi] as a dispatch-level composition of the shared per-op
-        executables (the default, cut-invariant segment form)."""
-        def segment(states: Dict[str, Any], batch: Batch):
+    def _fuse_ops(self, idxs: Tuple[int, ...]) -> Callable:
+        """The segment as a dispatch-level composition of the shared
+        per-op executables (the default, cut-invariant segment form)."""
+        def segment(states: Dict[str, Any], env: Batch):
             states = dict(states)
-            for i in range(lo, hi):
-                op = self.ops[i]
-                st, batch = self._op_fn(i)(states[op.name], batch)
-                states[op.name] = st
-            return states, batch
+            for i in idxs:
+                states, env = self._apply(i, states, env)
+            return states, env
 
         return segment
 
-    def _segment_fn(self, lo: int, hi: int, batch: Batch) -> Callable:
-        """Re-fuse (or fetch) the segment for ops[lo:hi] at this batch
-        signature — the compile cache that makes cut revisits free."""
-        key = (lo, hi, self._sig(batch))
+    def _segment_fn(self, idxs: Tuple[int, ...], batch: Batch) -> Callable:
+        """Re-fuse (or fetch) the segment for the op subset ``idxs`` at
+        this batch signature — the compile cache that makes frontier
+        revisits free."""
+        key = (idxs, self._sig(batch))
         fn = self._segments.get(key)
         if fn is None:
-            fn = (self._fuse_xla(lo, hi) if self.fuse == "xla"
-                  else self._fuse_ops(lo, hi))
+            fn = (self._fuse_xla(idxs) if self.fuse == "xla"
+                  else self._fuse_ops(idxs))
             self._segments[key] = fn
             self.compiles += 1
         else:
             self.cache_hits += 1
         return fn
+
+    def _run_segments(self, states: Dict[str, Any], batch: Batch,
+                      segments: Sequence[Tuple[int, ...]]
+                      ) -> Tuple[Dict[str, Any], Batch]:
+        for idxs in segments:
+            if not idxs:
+                continue
+            sub = {self.ops[i].name: states[self.ops[i].name] for i in idxs}
+            fn = self._segment_fn(tuple(idxs), batch)
+            sub, batch = fn(sub, batch)
+            states = {**states, **sub}
+        return states, batch
+
+    def run(self, states: Dict[str, Any], batch: Batch,
+            frontier: Iterable[str] = ()
+            ) -> Tuple[Dict[str, Any], Batch]:
+        """Execute under the downward-closed cut ``frontier``: member ops
+        form the edge segment, the rest the cloud segment (either may be
+        empty); within each segment ops run in graph list order."""
+        f = self.check_frontier(frontier)
+        edge = tuple(i for i, op in enumerate(self.ops) if op.name in f)
+        cloud = tuple(i for i, op in enumerate(self.ops) if op.name not in f)
+        return self._run_segments(states, batch, (edge, cloud))
+
+    def run_reference(self, states: Dict[str, Any], batch: Batch
+                      ) -> Tuple[Dict[str, Any], Batch]:
+        """Unpartitioned execution: every op in one (cloud) segment, in
+        graph list order — under the default ``fuse="op"`` this is the
+        composition of the shared per-op executables (one jit *per op*,
+        not one fused program; use ``fuse="xla"`` for whole-segment jit).
+        Any downward-closed cut must reproduce this bitwise."""
+        return self.run(states, batch, frontier=())
+
+
+class Pipeline(OpGraph):
+    """An ordered list of :class:`Op`, executable under any prefix cut —
+    the linear special case of :class:`OpGraph`.
+
+    The dependency structure is the chain itself (op ``i`` precedes op
+    ``i+1``), so frontiers are exactly the prefixes and placement reduces
+    to the prefix-cut search; channel declarations are not required, and
+    each op receives the full batch dict exactly as before."""
+
+    def __init__(self, ops: Sequence[Op], fuse: str = "op"):
+        ops = tuple(ops)
+        if not ops:
+            raise ValueError("pipeline needs at least one op")
+        super().__init__(ops, fuse=fuse)
+
+    def _build_deps(self):
+        # a chain: each op depends on its predecessor; bytes flow along
+        # consecutive edges and the raw stream enters at ops[0].
+        n = len(self.ops)
+        self._parents = tuple(frozenset(() if i == 0 else (i - 1,))
+                              for i in range(n))
+        self.flow_edges = tuple((self.ops[i].name, self.ops[i + 1].name)
+                                for i in range(n - 1))
+        self.source_reads = ()
+        self.source_consumers = (self.ops[0].name,)
+
+    @property
+    def source_bytes_per_event(self) -> float:
+        return self.ops[0].cost.bytes_per_event
+
+    @property
+    def n_cuts(self) -> int:
+        """Valid cuts are 0..len(ops): ops[:k] edge, ops[k:] cloud."""
+        return len(self.ops) + 1
+
+    def _apply(self, i: int, states: Dict[str, Any], env: Batch,
+               call: Optional[Callable] = None
+               ) -> Tuple[Dict[str, Any], Batch]:
+        # linear threading: the op sees (and returns) the full batch dict,
+        # no channel restriction — byte-compatible with undeclared ops.
+        op = self.ops[i]
+        st, env = (call or self._op_fn(i))(states[op.name], env)
+        states[op.name] = st
+        return states, env
 
     def run(self, states: Dict[str, Any], batch: Batch, cut: int
             ) -> Tuple[Dict[str, Any], Batch]:
@@ -172,25 +411,23 @@ class Pipeline:
         ops[cut:] as the cloud segment (either may be empty)."""
         if not 0 <= cut <= len(self.ops):
             raise ValueError(f"cut {cut} outside [0, {len(self.ops)}]")
-        for lo, hi in ((0, cut), (cut, len(self.ops))):
-            if lo == hi:
-                continue
-            sub = {op.name: states[op.name] for op in self.ops[lo:hi]}
-            fn = self._segment_fn(lo, hi, batch)
-            sub, batch = fn(sub, batch)
-            states = {**states, **sub}
-        return states, batch
+        return self._run_segments(
+            states, batch, (tuple(range(0, cut)),
+                            tuple(range(cut, len(self.ops)))))
 
     def run_reference(self, states: Dict[str, Any], batch: Batch
                       ) -> Tuple[Dict[str, Any], Batch]:
-        """Unpartitioned execution: the whole pipeline as one fused jit.
-        Any cut must reproduce this bitwise."""
+        """Unpartitioned execution: the whole chain as one (cloud) segment
+        — under the default ``fuse="op"`` that is the per-op composition
+        at cut 0, not a single fused jit (``fuse="xla"`` fuses it). Any
+        cut must reproduce this bitwise."""
         return self.run(states, batch, cut=0)
 
 
 # ---------------------------------------------------------------------------
 # Standard op wrappers around streams/ and ml/ — the same functions the
-# hard-coded orchestrator stages used to call, now declared as IR nodes.
+# hard-coded orchestrator stages used to call, now declared as IR nodes
+# with named channels so they compose into DAGs as well as chains.
 # ---------------------------------------------------------------------------
 
 def _ev(dim: int) -> float:
@@ -205,17 +442,19 @@ def normalize_op(dim: int) -> Op:
     cost = OperatorCost("normalize", flops_per_event=50 * dim,
                         bytes_per_event=4 * _ev(dim),
                         out_bytes_per_event=_ev(dim))
-    return Op("normalize", fn, cost, init=lambda: prep.norm_init(dim))
+    return Op("normalize", fn, cost, init=lambda: prep.norm_init(dim),
+              reads=("x",), writes=("x",))
 
 
 def sketch_op(dim: int) -> Op:
-    """Streaming moments sketch (edge-side summary)."""
+    """Streaming moments sketch (edge-side summary; state-only sink)."""
     def fn(state, batch):
         return sk.moments_update(state, batch["x"]), batch
     cost = OperatorCost("sketch", flops_per_event=20 * dim,
                         bytes_per_event=2 * _ev(dim),
                         out_bytes_per_event=_ev(dim))
-    return Op("sketch", fn, cost, init=lambda: sk.moments_init(dim))
+    return Op("sketch", fn, cost, init=lambda: sk.moments_init(dim),
+              reads=("x",), writes=())
 
 
 def sample_op(dim: int, rate: float, reservoir_k: int = 256) -> Op:
@@ -229,7 +468,8 @@ def sample_op(dim: int, rate: float, reservoir_k: int = 256) -> Op:
                         bytes_per_event=2 * _ev(dim),
                         out_bytes_per_event=_ev(dim) * rate)
     return Op("sample", fn, cost,
-              init=lambda: samp.reservoir_init(reservoir_k, dim))
+              init=lambda: samp.reservoir_init(reservoir_k, dim),
+              reads=("x", "y", "rng"), writes=("mask", "rng"))
 
 
 def logreg_train_op(dim: int, lr: float = 0.5,
@@ -257,7 +497,8 @@ def logreg_train_op(dim: int, lr: float = 0.5,
     return Op("train", fn, cost,
               init=lambda: (online.logreg_init(dim), mmetrics.preq_init()),
               on_drift=lambda s: (online.logreg_reset_soft(s[0]), s[1]),
-              metrics=lambda s: mmetrics.preq_metrics(s[1]))
+              metrics=lambda s: mmetrics.preq_metrics(s[1]),
+              reads=("x", "y", "mask"), writes=("p", "err"))
 
 
 def drift_op(detector: str = "ddm") -> Op:
@@ -277,7 +518,8 @@ def drift_op(detector: str = "ddm") -> Op:
         return state, {**batch, "drifted": drifted}
     cost = OperatorCost("drift", flops_per_event=50, bytes_per_event=64,
                         out_bytes_per_event=8, edge_capable=False)
-    return Op("drift", fn, cost, init=init_fn)
+    return Op("drift", fn, cost, init=init_fn,
+              reads=("err",), writes=("drifted",))
 
 
 # -- scenario-diversity ops -------------------------------------------------
@@ -291,7 +533,8 @@ def hash_op(dim: int, seed: int = 17) -> Op:
     cost = OperatorCost("hash", flops_per_event=10 * dim,
                         bytes_per_event=2 * _ev(dim),
                         out_bytes_per_event=_ev(dim))
-    return Op("hash", fn, cost)
+    return Op("hash", fn, cost,
+              reads=("ids", "vals"), writes=("x",), deletes=("ids", "vals"))
 
 
 def pca_op(dim: int, k: int, lr: float = 1e-2, seed: int = 0) -> Op:
@@ -302,7 +545,8 @@ def pca_op(dim: int, k: int, lr: float = 1e-2, seed: int = 0) -> Op:
     cost = OperatorCost("pca", flops_per_event=4 * dim * k,
                         bytes_per_event=6 * _ev(dim),
                         out_bytes_per_event=4.0 * k)
-    return Op("pca", fn, cost, init=lambda: prep.oja_init(dim, k, seed))
+    return Op("pca", fn, cost, init=lambda: prep.oja_init(dim, k, seed),
+              reads=("x",), writes=("x",))
 
 
 def concat_op(key: str, out_dim: int) -> Op:
@@ -315,7 +559,8 @@ def concat_op(key: str, out_dim: int) -> Op:
     cost = OperatorCost("concat", flops_per_event=2 * out_dim,
                         bytes_per_event=2 * _ev(out_dim),
                         out_bytes_per_event=_ev(out_dim))
-    return Op("concat", fn, cost)
+    return Op("concat", fn, cost,
+              reads=("x", key), writes=("x",), deletes=(key,))
 
 
 def anomaly_op(dim: int, m: int = 8, seed: int = 0) -> Op:
@@ -327,8 +572,23 @@ def anomaly_op(dim: int, m: int = 8, seed: int = 0) -> Op:
     cost = OperatorCost("anomaly", flops_per_event=2 * dim * m,
                         bytes_per_event=4 * _ev(dim),
                         out_bytes_per_event=4.0)
-    return Op("anomaly", fn, cost, init=lambda: online.anomaly_init(dim, m=m,
-                                                                    seed=seed))
+    return Op("anomaly", fn, cost,
+              init=lambda: online.anomaly_init(dim, m=m, seed=seed),
+              reads=("x",), writes=("score",))
+
+
+def alert_op(threshold: float = 3.0) -> Op:
+    """Rejoin head: fuses the anomaly branch's `score` with the learner
+    branch's `drifted` flag into a per-batch `alert` — the downstream
+    consumer a fan-out graph re-converges on."""
+    def fn(state, batch):
+        hot = jnp.mean((batch["score"] > threshold).astype(jnp.float32))
+        alert = jnp.logical_or(hot > 0.5, batch["drifted"])
+        return state, {**batch, "alert": alert}
+    cost = OperatorCost("alert", flops_per_event=4, bytes_per_event=16,
+                        out_bytes_per_event=1.0)
+    return Op("alert", fn, cost, reads=("score", "drifted"),
+              writes=("alert",))
 
 
 def standard_stream_pipeline(dim: int, sample_rate: float = 0.5,
@@ -342,4 +602,35 @@ def standard_stream_pipeline(dim: int, sample_rate: float = 0.5,
         sample_op(dim, sample_rate, reservoir_k),
         logreg_train_op(dim),
         drift_op(drift_detector),
+    ])
+
+
+def fanout_stream_graph(dim: int, sample_rate: float = 0.5,
+                        drift_detector: str = "ddm",
+                        reservoir_k: int = 256,
+                        anomaly_threshold: float = 3.0) -> OpGraph:
+    """The Fig. 2 fan-out/rejoin workflow a linear pipeline cannot express:
+
+    ::
+
+        normalize ──> sketch                      (summary branch)
+              ├─────> anomaly ──────────┐         (scoring branch)
+              └─────> sample -> train -> drift    (learner branch)
+                                 score │  │ drifted
+                                       └──┴─> alert
+
+    The normalized stream fans out to a moments sketch, an anomaly
+    scorer, and a sample->train->drift learner chain; the anomaly and
+    learner branches rejoin at the alert head. Because the branches are
+    dependency-independent, a frontier cut can keep e.g. `anomaly` on
+    the edge while `train` offloads to the cloud — an assignment no
+    prefix cut of any op ordering can produce."""
+    return OpGraph([
+        normalize_op(dim),
+        sketch_op(dim),
+        anomaly_op(dim),
+        sample_op(dim, sample_rate, reservoir_k),
+        logreg_train_op(dim),
+        drift_op(drift_detector),
+        alert_op(anomaly_threshold),
     ])

@@ -1,24 +1,27 @@
 """Operator placement across heterogeneous cloud/edge pools (S2CE O2).
 
 Placement of a stream pipeline onto heterogeneous resources is NP-hard
-(§2.3 [17]); for linear pipelines with one cloud uplink the structure is a
-*prefix cut*: the optimal assignment puts a prefix of stages on the edge
-and the suffix on the cloud (moving a mid-pipeline stage to the edge never
-helps once data has crossed the uplink). We therefore search all feasible
-prefix cuts exactly, then run a local-search refinement for non-linear
-objectives (energy weighting, multi-constraint), and fall back to
-exhaustive search for small pipelines as the oracle the tests check
-against.
+(§2.3 [17]); the tractable structure is the *downward-closed cut*: the
+optimal assignment puts an ancestor-closed set of operators on the edge
+and the rest on the cloud, because moving an op whose input already
+crossed the uplink back to the (slower) edge only adds transfers and
+compute latency. For a linear chain the downward-closed sets are the
+prefixes, so :func:`place` searches all prefix cuts exactly (unchanged
+from the linear IR); for an operator DAG, :func:`place_frontier`
+enumerates every downward-closed *frontier* of the graph — the antichain
+cuts — and prices each crossing edge individually. Both fall back to
+exhaustive assignment search on small graphs as the oracle the tests
+check against (:func:`place_exhaustive` / :func:`place_graph_exhaustive`).
 """
 
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, FrozenSet, Iterator, List, Optional, Tuple
 
 from repro.core.costmodel import (OperatorCost, PipelinePlan, Resource,
-                                  evaluate_plan)
+                                  evaluate_graph_plan, evaluate_plan)
 
 
 @dataclass
@@ -96,6 +99,73 @@ def place_exhaustive(ops: List[OperatorCost], resources: Dict[str, Resource],
         plan = evaluate_plan(ops, assign, resources, rate)
         s = objective.score(plan)
         if s < best_score:
+            best, best_score = plan, s
+    return best
+
+
+# ---------------------------------------------------------------------------
+# DAG placement: frontier (downward-closed) cuts over an OpGraph
+# ---------------------------------------------------------------------------
+
+def _graph_plan(graph, assign: Dict[str, str],
+                resources: Dict[str, Resource], rate: float) -> PipelinePlan:
+    return evaluate_graph_plan(
+        graph.costs(), graph.flow_edges, assign, resources, rate,
+        source_consumers=graph.source_consumers,
+        source_bytes=graph.source_bytes_per_event)
+
+
+def frontier_plans(graph, resources: Dict[str, Resource], rate: float
+                   ) -> Iterator[Tuple[FrozenSet[str], PipelinePlan]]:
+    """All plans of the form: a downward-closed frontier of ``graph`` on
+    the edge pool, its complement on the cloud pool. For a linear
+    :class:`~repro.core.pipeline.Pipeline` the frontiers are exactly the
+    prefixes, so this degenerates to :func:`prefix_cut_plans`."""
+    edge, cloud = edge_cloud_pools(resources)
+    for frontier in graph.frontiers():
+        assign = {name: (edge.name if name in frontier else cloud.name)
+                  for name in graph.names}
+        yield frontier, _graph_plan(graph, assign, resources, rate)
+
+
+def place_frontier(graph, resources: Dict[str, Resource], rate: float,
+                   objective: Optional[Objective] = None
+                   ) -> Tuple[PipelinePlan, FrozenSet[str]]:
+    """Best frontier-cut placement of an operator DAG. Returns
+    ``(plan, frontier)`` where ``frontier`` is the edge-resident op set."""
+    objective = objective or Objective()
+    best, best_f, best_score = None, frozenset(), float("inf")
+    for frontier, plan in frontier_plans(graph, resources, rate):
+        s = objective.score(plan)
+        if s < best_score or (s == best_score and best is not None
+                              and len(frontier) < len(best_f)):
+            best, best_f, best_score = plan, frontier, s
+    if best is None or not best.feasible:
+        # all-cloud fallback (the empty frontier is always structurally
+        # valid; may still be infeasible under extreme rates — caller
+        # must check .feasible)
+        _, cloud = edge_cloud_pools(resources)
+        assign = {name: cloud.name for name in graph.names}
+        best = _graph_plan(graph, assign, resources, rate)
+        best_f = frozenset()
+    return best, best_f
+
+
+def place_graph_exhaustive(graph, resources: Dict[str, Resource],
+                           rate: float,
+                           objective: Optional[Objective] = None
+                           ) -> PipelinePlan:
+    """Oracle for DAG placement: every assignment of every op to every
+    resource, including non-downward-closed ones (exponential; tests and
+    the benchmark harness only)."""
+    objective = objective or Objective()
+    rnames = list(resources)
+    best, best_score = None, float("inf")
+    for combo in itertools.product(rnames, repeat=len(graph.names)):
+        assign = dict(zip(graph.names, combo))
+        plan = _graph_plan(graph, assign, resources, rate)
+        s = objective.score(plan)
+        if best is None or s < best_score:
             best, best_score = plan, s
     return best
 

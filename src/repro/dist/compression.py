@@ -1,4 +1,4 @@
-"""Edge-uplink gradient compression (symmetric int8).
+"""Edge-uplink gradient compression (symmetric int8 + top-k).
 
 Edge workers in the S2CE deployment sync gradients to the cloud over
 constrained links; symmetric per-tensor int8 cuts uplink bytes 4x
@@ -10,6 +10,13 @@ estimate rides along for monitoring. ``ef_quantize``/``ef_roundtrip``
 add error feedback (residual carry): quantization error is folded into
 the next round's payload instead of being lost, so the accumulated
 error over a stream of updates stays bounded by one quantum.
+
+``topk_sparsify`` is the orthogonal axis: ship only the ``k``
+largest-magnitude coordinates (``8k`` wire bytes instead of ``4d``),
+and ``ef_topk``/``ef_topk_roundtrip`` carry the dropped mass forward
+as a residual so every coordinate is eventually transmitted — the
+classic deep-gradient-compression memory. The two schemes compose:
+sparsify first, then quantize the surviving values.
 """
 
 from __future__ import annotations
@@ -72,6 +79,62 @@ def ef_roundtrip(residual: jax.Array, x: jax.Array
     """Wire round-trip with residual carry: ``(decoded, new_residual)``."""
     q, scale, residual = ef_quantize(residual, x)
     return dequantize_int8(q, scale).astype(x.dtype), residual
+
+
+# ---------------------------------------------------------------------------
+# Top-k sparsification (+ error feedback)
+# ---------------------------------------------------------------------------
+
+def topk_sparsify(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Keep the ``k`` largest-|.| coordinates of the flattened tensor.
+
+    Returns ``(values fp32 (k,), indices int32 (k,))`` — the wire payload
+    (``8k`` bytes vs ``4·size`` dense). ``k`` is clamped to the size."""
+    flat = jnp.ravel(x).astype(jnp.float32)
+    k = max(1, min(int(k), flat.shape[0]))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    idx = idx.astype(jnp.int32)
+    return flat[idx], idx
+
+
+def topk_densify(values: jax.Array, indices: jax.Array,
+                 shape: Tuple[int, ...]) -> jax.Array:
+    """Scatter the sparse payload back to a dense fp32 tensor."""
+    size = 1
+    for s in shape:
+        size *= int(s)
+    dense = jnp.zeros((size,), jnp.float32).at[indices].set(values)
+    return dense.reshape(shape)
+
+
+def topk_roundtrip(x: jax.Array, k: int) -> jax.Array:
+    """Sparsify-densify in one step (what the wire does to a tensor)."""
+    v, i = topk_sparsify(x, k)
+    return topk_densify(v, i, jnp.shape(x)).astype(x.dtype)
+
+
+def ef_topk(residual: jax.Array, x: jax.Array, k: int
+            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback top-k sparsification step (DGC-style memory).
+
+    The carried residual is folded into the tensor *before* selection,
+    and the dropped ``d-k`` coordinates are carried forward:
+    ``(values, indices, new_residual)``. Plain top-k silently drops the
+    same small coordinates every round (error grows linearly); with the
+    carry, dropped mass accumulates until it wins selection, so the
+    cumulative decoded stream tracks the cumulative true stream to
+    within one residual (the telescoping identity the tests check).
+    """
+    xc = x.astype(jnp.float32) + residual
+    v, i = topk_sparsify(xc, k)
+    return v, i, xc - topk_densify(v, i, jnp.shape(xc))
+
+
+def ef_topk_roundtrip(residual: jax.Array, x: jax.Array, k: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Wire round-trip with residual carry: ``(decoded, new_residual)``."""
+    v, i, residual = ef_topk(residual, x, k)
+    return topk_densify(v, i, jnp.shape(x)).astype(x.dtype), residual
 
 
 def compressed_allreduce_mean(

@@ -93,7 +93,7 @@ def replicated_axes(tree):
 
 def rescale_cycle(directory, step: int, tree, axes_tree, rules: dict,
                   new_workers: int, *, prefer_model: int = 1,
-                  meta: Optional[dict] = None):
+                  meta: Optional[dict] = None, keep: Optional[int] = None):
     """Drive a :class:`ScalePlan` through the real state-carrying
     machinery: ``checkpoint.save -> rebuild_mesh -> reshard_tree`` and
     hand back the tree resident on the new mesh, ready to resume.
@@ -101,13 +101,15 @@ def rescale_cycle(directory, step: int, tree, axes_tree, rules: dict,
     This is the runtime mechanism behind elastic grow/shrink — the same
     cycle a failure recovery takes, so a rescale that is not an even
     re-partition of the old layout (``plan.needs_checkpoint_cycle``)
-    still round-trips safely. Returns ``(tree_on_new_mesh, mesh)``.
+    still round-trips safely. ``keep`` bounds the published step dirs
+    (checkpoint GC) so repeated rescales don't grow the directory
+    unboundedly. Returns ``(tree_on_new_mesh, mesh)``.
     """
     import jax
 
     from repro.dist import checkpoint as ckpt
 
-    ckpt.save(directory, int(step), tree,
+    ckpt.save(directory, int(step), tree, keep=keep,
               meta={"workers": int(new_workers), **(meta or {})})
     restored, _ = ckpt.restore(directory, tree, step=int(step))
     devices = jax.devices()

@@ -16,7 +16,8 @@ from repro.dist import elastic
 from repro.dist.api import logical_to_spec
 from repro.dist.compression import (
     compressed_allreduce_mean, dequantize_int8, ef_init, ef_roundtrip,
-    int8_roundtrip, quantize_int8,
+    ef_topk_roundtrip, int8_roundtrip, quantize_int8, topk_densify,
+    topk_roundtrip, topk_sparsify,
 )
 from repro.dist.sharding import build_rules
 
@@ -132,6 +133,49 @@ def test_compressed_mean_host_side():
     np.testing.assert_allclose(np.asarray(mean), np.asarray(x.mean(0)),
                                atol=2e-2)
     assert float(err) >= 0.0 and np.isfinite(float(err))
+
+
+def test_topk_sparsify_keeps_largest_coordinates():
+    x = jnp.asarray(np.array([[0.1, -5.0, 0.2], [3.0, -0.05, 0.4]],
+                             np.float32))
+    v, i = topk_sparsify(x, 2)
+    dense = topk_densify(v, i, x.shape)
+    # the two largest-|.| entries survive exactly; the rest are zeroed
+    np.testing.assert_array_equal(
+        np.asarray(dense), np.array([[0, -5.0, 0], [3.0, 0, 0]], np.float32))
+    np.testing.assert_array_equal(np.asarray(topk_roundtrip(x, 2)),
+                                  np.asarray(dense))
+    # k clamps to the tensor size (full fidelity)
+    np.testing.assert_array_equal(np.asarray(topk_roundtrip(x, 100)),
+                                  np.asarray(x))
+
+
+def test_topk_error_feedback_bounds_accumulated_error():
+    """Residual carry keeps the error of a 50-step accumulated sparse
+    uplink bounded (every coordinate is eventually transmitted); plain
+    top-k drops the same small coordinates every step and drifts
+    linearly. Mirrors the int8 `ef_roundtrip` bounded-error test."""
+    rng = np.random.default_rng(0)
+    d, k, steps = 128, 16, 50
+    g = jnp.asarray(rng.normal(scale=1e-2, size=(d,)).astype(np.float32))
+    plain = jnp.zeros_like(g)
+    ef = jnp.zeros_like(g)
+    residual = ef_init(g)
+    for _ in range(steps):
+        plain = plain + topk_roundtrip(g, k)
+        dec, residual = ef_topk_roundtrip(residual, g, k)
+        ef = ef + dec
+    true = steps * g
+    err_plain = float(jnp.max(jnp.abs(plain - true)))
+    err_ef = float(jnp.max(jnp.abs(ef - true)))
+    # exact telescoping identity: everything not yet sent is the residual
+    np.testing.assert_allclose(np.asarray(ef + residual), np.asarray(true),
+                               rtol=1e-4, atol=1e-5)
+    # EF error stays bounded by one round-robin sweep of dropped mass...
+    assert err_ef <= (d / k) * float(jnp.max(jnp.abs(g))) + 1e-6
+    # ...while plain top-k accumulates the dropped coordinates linearly
+    assert err_plain >= 0.5 * steps * float(jnp.sort(jnp.abs(g))[d - k - 1])
+    assert err_ef < err_plain
 
 
 def test_error_feedback_bounds_accumulated_error():

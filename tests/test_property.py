@@ -11,6 +11,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pipeline as pl
+from repro.core.costmodel import CLOUD_POD, EDGE_NODE, OperatorCost
+from repro.core.placement import (Objective, place_frontier,
+                                  place_graph_exhaustive)
 from repro.dist.api import logical_to_spec
 from repro.dist.compression import dequantize_int8, quantize_int8
 from repro.streams import sketches as sk
@@ -158,6 +161,86 @@ def test_pipeline_every_cut_bitwise_matches_reference(kind, dim, nbatches,
             np.testing.assert_array_equal(
                 np.asarray(a), np.asarray(b),
                 err_msg=f"kind={kind} cut={cut} diverged from reference")
+
+
+@settings(max_examples=6, deadline=None, database=None)
+@given(dim=st.sampled_from([4, 8]),
+       sample_rate=st.sampled_from([0.3, 0.7]),
+       nbatches=st.integers(1, 2),
+       seed=st.integers(0, 1000))
+def test_fanout_graph_every_frontier_bitwise_matches_reference(
+        dim, sample_rate, nbatches, seed):
+    """Partitioning the fan-out/rejoin DAG at ANY downward-closed cut —
+    including cuts that keep parallel branches on different sides — must
+    reproduce the unpartitioned reference execution bitwise."""
+    g = pl.fanout_stream_graph(dim, sample_rate=sample_rate)
+    data = _property_batches("standard", dim, nbatches, seed)
+
+    def run(frontier):
+        states = g.init_states()
+        rng = jax.random.PRNGKey(seed)
+        outs = []
+        for bd in data:
+            bd = dict(bd)
+            bd["rng"] = rng
+            states, out = g.run(states, bd, frontier)
+            rng = out["rng"]
+            outs.append(out)
+        return states, outs
+
+    ref = run(frozenset())
+    for frontier in g.frontiers():
+        got = run(frontier)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"frontier={sorted(frontier)} diverged")
+
+
+def _ident(state, batch):
+    return state, batch
+
+
+@st.composite
+def _random_dag(draw):
+    """A random small operator DAG (<=6 ops) with random channel wiring
+    and random cost profiles, plus a random event rate."""
+    n = draw(st.integers(2, 6))
+    n_src = draw(st.integers(1, 2))
+    sources = [f"s{i}" for i in range(n_src)]
+    ops = []
+    for j in range(n):
+        avail = sources + [f"k{i}" for i in range(j)]
+        reads = tuple(sorted(draw(st.sets(st.sampled_from(avail),
+                                          max_size=min(3, len(avail))))))
+        cost = OperatorCost(
+            f"op{j}",
+            flops_per_event=draw(st.floats(10.0, 1e7)),
+            bytes_per_event=draw(st.floats(8.0, 4096.0)),
+            out_bytes_per_event=draw(st.floats(1.0, 2048.0)),
+            edge_capable=draw(st.booleans()))
+        ops.append(pl.Op(f"op{j}", _ident, cost,
+                         reads=reads, writes=(f"k{j}",)))
+    rate = draw(st.floats(1e2, 1e7))
+    return pl.OpGraph(ops), rate
+
+
+@settings(max_examples=60, deadline=None, database=None)
+@given(case=_random_dag())
+def test_frontier_search_matches_exhaustive_oracle_on_random_dags(case):
+    """Frontier-cut (downward-closed) placement search must find the same
+    best score as the exhaustive all-assignments oracle on random small
+    DAGs — backhaul-free assignments ARE the frontier cuts, so searching
+    only antichain cuts loses nothing."""
+    graph, rate = case
+    obj = Objective()
+    res = {"edge": EDGE_NODE, "cloud": CLOUD_POD}
+    best, frontier = place_frontier(graph, res, rate, obj)
+    oracle = place_graph_exhaustive(graph, res, rate, obj)
+    assert obj.score(best) <= obj.score(oracle) * 1.0001, (
+        f"frontier search lost to the oracle: frontier={sorted(frontier)} "
+        f"score={obj.score(best)} oracle={obj.score(oracle)} "
+        f"oracle_assign={oracle.assignment}")
 
 
 @settings(max_examples=20, deadline=None)
