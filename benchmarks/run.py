@@ -151,6 +151,63 @@ def bench_dag_placement(rows, quick):
                  f"frontier_matches_oracle={agree}"))
 
 
+def bench_dag_place_multipool(rows, quick):
+    """ClusterSpec path: frontier placement over a 2-edge-pool/2-cloud-pod
+    topology with codec-carrying uplinks (frontiers x within-kind pool
+    assignments) vs the multi-pool exhaustive oracle."""
+    from repro.core import costmodel as cm
+    from repro.core.pipeline import fanout_stream_graph
+    from repro.core.placement import (Objective, place_frontier,
+                                      place_graph_exhaustive)
+    edge_b = cm.Resource("edge_b", "edge", chips=1, flops=1e12, mem_bw=40e9,
+                         mem_cap=2e9, net_bw=0.5e9, net_latency=35e-3,
+                         energy_w=10.0)
+    cloud_b = cm.Resource("cloud_b", "cloud", chips=64, net_latency=0.5e-3,
+                          energy_w=220.0)
+    spec = cm.ClusterSpec(
+        pools=[cm.EDGE_NODE, edge_b, cm.CLOUD_POD, cloud_b],
+        links=[cm.Link("edge", "cloud", bw=1e9, latency=20e-3,
+                       codec="int8_ef"),
+               cm.Link("edge_b", "cloud_b", bw=0.5e9, latency=40e-3,
+                       codec="topk_int8_ef"),
+               cm.Link("edge", "edge_b", bw=2e9, latency=5e-3)])
+    g = fanout_stream_graph(dim=16)
+    obj = Objective()
+    iters = 2 if quick else 5
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        plan, frontier = place_frontier(g, spec, 1e4, obj)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    oracle = place_graph_exhaustive(g, spec, 1e4, obj)
+    agree = obj.score(plan) <= obj.score(oracle) * 1.0001
+    n_assign = len(spec) ** len(g.names)
+    rows.append(("dag_place_multipool", us,
+                 f"{len(spec)} pools, oracle {n_assign} assigns, "
+                 f"edge={len(frontier)}/{len(g.names)} ops, "
+                 f"matches_oracle={agree}"))
+
+
+def bench_uplink_codec(rows, quick):
+    """Uplink codec round-trip throughput + measured accumulated error
+    vs the admitted bound, per codec."""
+    from repro.core.codecs import DEFAULT_CODECS
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(16, 4096)).astype(np.float32))
+    for codec in DEFAULT_CODECS:
+        if codec.lossless:
+            continue
+        residual = codec.init_residual(x)
+        fn = jax.jit(codec.roundtrip)
+        us = _timeit(fn, residual, x, iters=5 if quick else 20)
+        dec, r = fn(residual, x)
+        err = float(jnp.max(jnp.abs(r))) / max(
+            float(jnp.max(jnp.abs(x))), 1e-30)
+        mb_s = x.size * 4 / us  # raw MB/s through the codec
+        rows.append((f"uplink_codec_{codec.name}", us,
+                     f"ratio={codec.ratio:.3f} {mb_s:.0f}MB/s "
+                     f"rel_err={err:.4f}<=bound={codec.error_bound:.4f}"))
+
+
 def bench_fusion_join(rows, quick):
     """WindowJoin hot path: vectorized as-of join + slice eviction."""
     from repro.streams.events import StreamBatch
@@ -279,7 +336,8 @@ def bench_roofline_summary(rows, quick):
 
 ALL_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                bench_s3_offload, bench_pipeline_partition,
-               bench_dag_placement, bench_fusion_join,
+               bench_dag_placement, bench_dag_place_multipool,
+               bench_uplink_codec, bench_fusion_join,
                bench_s4_feature_matrix, bench_generators, bench_sketches,
                bench_train_micro, bench_serve_micro, bench_roofline_summary]
 
@@ -288,7 +346,8 @@ ALL_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
 # the process on any ERROR row so perf-path regressions break CI
 SMOKE_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                  bench_s3_offload, bench_pipeline_partition,
-                 bench_dag_placement, bench_fusion_join,
+                 bench_dag_placement, bench_dag_place_multipool,
+                 bench_uplink_codec, bench_fusion_join,
                  bench_s4_feature_matrix, bench_generators, bench_sketches]
 
 

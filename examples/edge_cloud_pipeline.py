@@ -1,35 +1,95 @@
-"""Edge/cloud placement + dynamic offloading under a traffic burst (S2CE O2,
-S3) — plus the straggler-tolerant feeder and a simulated node failure with
-elastic recovery from checkpoint.
+"""Multi-pool placement over a ClusterSpec topology + SLA-driven uplink
+codecs + dynamic offloading under a traffic burst (S2CE O2, S3) — plus
+the straggler-tolerant feeder.
+
+The cluster is declared as a first-class topology: named Resource pools
+(here 2 edge pools + 2 cloud pods) and explicit directed Links carrying
+bandwidth, latency, and an uplink codec. ``place_frontier`` assigns each
+side of a downward-closed frontier cut across *all* pools of its kind,
+pricing every crossing link with codec-compressed bytes and DAG latency
+as the critical path.
+
+The old two-pool style — a flat ``{"edge": ..., "cloud": ...}`` dict
+collapsed by the ``edge_cloud_pools`` shim to the first pool of each
+kind — still works everywhere but is DEPRECATED: it ignores extra pools
+and their links. Prefer building a ``ClusterSpec``.
 
   PYTHONPATH=src python examples/edge_cloud_pipeline.py
 """
 
-import numpy as np
-
 from repro.core import costmodel as cm
+from repro.core import pipeline as pl
 from repro.core.offload import OffloadController
-from repro.core.placement import Objective, place, standard_pipeline
-from repro.core.sla import SLA, SLATracker
+from repro.core.placement import (Objective, place, place_frontier,
+                                  place_graph_exhaustive, standard_pipeline)
+from repro.core.sla import SLA, SLATracker, pick_codec
 from repro.streams.feeder import StreamFeeder
 from repro.streams.generators import HyperplaneStream
 
 
+def build_cluster(codec: str = "identity") -> cm.ClusterSpec:
+    """A 2-edge-pool + 2-cloud-pod topology with per-link codecs:
+    a gateway-class edge pool, a weaker far-edge pool, the main pod, and
+    a smaller regional pod."""
+    far_edge = cm.Resource("far_edge", "edge", chips=1, flops=1e12,
+                           mem_bw=40e9, mem_cap=2e9, net_bw=0.5e9,
+                           net_latency=35e-3, energy_w=10.0)
+    regional = cm.Resource("regional", "cloud", chips=64,
+                           net_latency=0.5e-3, energy_w=220.0)
+    return cm.ClusterSpec(
+        pools=[cm.EDGE_NODE, far_edge, cm.CLOUD_POD, regional],
+        links=[
+            cm.Link("edge", "cloud", bw=1e9, latency=20e-3, codec=codec),
+            cm.Link("edge", "regional", bw=0.8e9, latency=15e-3,
+                    codec=codec),
+            cm.Link("far_edge", "cloud", bw=0.5e9, latency=35e-3,
+                    codec=codec),
+            cm.Link("far_edge", "regional", bw=0.5e9, latency=30e-3,
+                    codec=codec),
+            cm.Link("edge", "far_edge", bw=2e9, latency=5e-3),
+        ])
+
+
 def main():
+    # -- SLA-driven codec admission ---------------------------------------
+    print("== SLA error budget -> cheapest admissible uplink codec ==")
+    for budget in (0.0, 0.1, 11.0):
+        c = pick_codec(SLA(error_budget=budget))
+        print(f"  budget {budget:5.2f} -> {c.name:13s} "
+              f"(wire ratio {c.ratio:.3f}, tested bound {c.error_bound:.4f})")
+    codec = pick_codec(SLA(error_budget=11.0))
+
+    # -- multi-pool frontier placement across ingest rates ----------------
+    cluster = build_cluster(codec.name)
+    print(f"\n== {cluster} ==")
+    g = pl.fanout_stream_graph(dim=16)
+    print("== multi-pool frontier placement across ingest rates ==")
+    for rate in (1e3, 1e5, 1e6):
+        plan, frontier = place_frontier(g, cluster, rate,
+                                        Objective(energy_weight=0.1))
+        oracle = place_graph_exhaustive(g, cluster, rate,
+                                        Objective(energy_weight=0.1))
+        obj = Objective(energy_weight=0.1)
+        pools_used = sorted(set(plan.assignment.values()))
+        print(f"rate {rate:9.0f} ev/s -> edge={sorted(frontier) or ['-']}")
+        print(f"    pools={pools_used} latency={plan.latency_s*1e3:6.2f}ms "
+              f"uplink={plan.uplink_utilization:6.4f} "
+              f"feasible={plan.feasible} "
+              f"oracle_match={obj.score(plan) <= obj.score(oracle)*1.0001}")
+
+    # -- deprecated two-pool shim (still works, collapses the topology) ---
+    print("\n== deprecated flat-dict path (first pool of each kind) ==")
     resources = {"edge": cm.EDGE_NODE, "cloud": cm.CLOUD_POD}
     ops = standard_pipeline(dim=64, sample_rate=0.25)
-
-    print("== static placement across ingest rates ==")
-    for rate in [1e3, 1e4, 1e5, 1e6, 1e7]:
+    for rate in (1e3, 1e6):
         plan, cut = place(ops, resources, rate, Objective(energy_weight=0.1))
-        on_edge = [o.name for o in ops[:cut]]
-        print(f"rate {rate:9.0f} ev/s -> edge stages {on_edge or ['(none)']} "
-              f"latency={plan.latency_s * 1e3:6.2f} ms "
-              f"uplink={plan.uplink_utilization:5.3f} "
-              f"energy={plan.energy_w:7.0f} W feasible={plan.feasible}")
+        print(f"  rate {rate:9.0f} ev/s -> prefix cut {cut} "
+              f"latency={plan.latency_s * 1e3:6.2f}ms")
 
+    # -- dynamic offload under a 40x burst, multi-pool plan identity ------
     print("\n== dynamic offload under a 40x burst ==")
-    ctl = OffloadController(ops, resources, cooldown=2)
+    ctl = OffloadController(g.costs(), cluster, graph=g, cooldown=2,
+                            codec=codec.name)
     sla = SLATracker(SLA(max_latency_s=0.05))
     ctl.initial_plan(5e3)
     rates = [5e3] * 10 + [2e5] * 10 + [5e3] * 10      # burst in the middle
@@ -37,7 +97,7 @@ def main():
         d = ctl.observe(step, rate, sla)
         if d.reason != "hold":
             print(f"step {step:3d}: rate={rate:9.0f} -> {d.reason:9s} "
-                  f"cut={d.cut} (stages on edge: {d.cut})")
+                  f"edge={sorted(d.frontier) or ['-']} codec={d.codec}")
     print(f"total migrations: {ctl.migrations()}")
 
     print("\n== straggler-tolerant feeding ==")

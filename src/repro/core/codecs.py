@@ -1,0 +1,193 @@
+"""Uplink codecs: the pluggable compression protocol attached to
+:class:`~repro.core.costmodel.Link` objects in a ``ClusterSpec``.
+
+A :class:`UplinkCodec` bundles the three views one compression scheme
+needs across the stack:
+
+  * **pricing** — ``ratio`` (wire bytes as a fraction of the raw fp32
+    payload) lets :func:`~repro.core.costmodel.evaluate_graph_plan`
+    charge codec-compressed bytes on every crossing link;
+  * **admission** — ``error_bound`` is the codec's accumulated relative
+    error bound (the telescoping error-feedback residual, normalized by
+    the stream's peak magnitude). :func:`repro.core.sla.pick_codec`
+    admits a codec only when this bound fits the SLA error budget; the
+    bounds are property-tested in ``tests/test_cluster.py`` against the
+    same EF round-trip identities ``tests/test_dist.py`` checks for the
+    raw primitives;
+  * **execution** — ``roundtrip(residual, x) -> (decoded, residual)`` is
+    the wire transform with error-feedback carry the orchestrator applies
+    to batch tensors crossing the edge->cloud boundary.
+
+All codecs are built from the existing :mod:`repro.dist.compression`
+primitives; ``topk_int8_ef`` is the composed scheme (sparsify first,
+then int8-quantize the survivors) sharing ONE residual so the
+telescoping identity ``sum(decoded) + residual == sum(true)`` holds for
+the composition exactly as it does for each half.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.compression import (dequantize_int8, ef_init, ef_roundtrip,
+                                    ef_topk_roundtrip, quantize_int8,
+                                    topk_densify, topk_sparsify)
+
+# one int8 quantum, relative to the tensor's peak magnitude: the EF carry
+# keeps accumulated error under ~2 quanta (see ef_roundtrip's bounded-
+# error test), so the admission bound is 2/127.
+_INT8_QUANTUM = 1.0 / 127.0
+
+Roundtrip = Callable[[jax.Array, jax.Array], Tuple[jax.Array, jax.Array]]
+
+
+@dataclass(frozen=True)
+class UplinkCodec:
+    """One uplink compression scheme: pricing ratio, tested accumulated
+    error bound, and the error-feedback wire transform.
+
+    ``error_bound`` is relative: after any number of round-trips over a
+    stream of tensors, ``max|cum(decoded) - cum(true)| <= error_bound *
+    max|x|`` (by the telescoping EF identity the accumulated error IS the
+    carried residual, so this is a bound on the residual magnitude).
+    """
+    name: str
+    ratio: float                   # wire bytes / raw fp32 payload bytes
+    error_bound: float             # accumulated relative error (tested)
+    roundtrip: Roundtrip = field(repr=False, compare=False,
+                                 default=lambda r, x: (x, r))
+
+    @property
+    def lossless(self) -> bool:
+        return self.error_bound == 0.0
+
+    def wire_bytes(self, raw_bytes: float) -> float:
+        """Bytes that actually cross the link for a raw fp32 payload."""
+        return raw_bytes * self.ratio
+
+    def init_residual(self, x: jax.Array) -> jax.Array:
+        return ef_init(x)
+
+
+def _identity_roundtrip(residual, x):
+    return x, residual
+
+
+def _topk_int8_roundtrip(residual, x, k_frac: float):
+    """Composed sparsify-then-quantize wire round-trip with ONE shared
+    error-feedback residual: the dropped coordinates AND the quantization
+    error of the survivors are both carried to the next round."""
+    xc = x.astype(jnp.float32) + residual
+    size = int(xc.size)
+    k = max(1, int(round(k_frac * size)))
+    v, i = topk_sparsify(xc, k)
+    vq = dequantize_int8(*quantize_int8(v))      # int8 the survivors
+    dec = topk_densify(vq, i, jnp.shape(xc))
+    return dec.astype(x.dtype), xc - dec
+
+
+def identity_codec() -> UplinkCodec:
+    """Lossless pass-through (the default on every link)."""
+    return UplinkCodec("identity", ratio=1.0, error_bound=0.0,
+                       roundtrip=_identity_roundtrip)
+
+
+def int8_ef_codec() -> UplinkCodec:
+    """Symmetric per-tensor int8 with error feedback: 4x fewer bytes,
+    accumulated error bounded by ~2 quanta of the peak magnitude."""
+    return UplinkCodec("int8_ef", ratio=0.25,
+                       error_bound=2.0 * _INT8_QUANTUM,
+                       roundtrip=ef_roundtrip)
+
+
+def _parameterized_name(base: str, k_frac: float) -> str:
+    """Codec names must be bijective with behavior: Link stores only the
+    name, so a non-default ``k_frac`` gets its own registry entry (e.g.
+    ``topk_ef_k0.25``) and pricing resolves the codec that actually
+    runs, not the default-parameter one."""
+    return base if k_frac == 0.1 else f"{base}_k{k_frac:g}"
+
+
+def topk_ef_codec(k_frac: float = 0.1) -> UplinkCodec:
+    """Top-k sparsification with error feedback: ship ``(value fp32,
+    index int32)`` pairs for the ``k_frac`` largest coordinates (8 bytes
+    each vs 4 per dense fp32 -> ratio ``2*k_frac``). The EF carry bounds
+    the accumulated error by one round-robin sweep of dropped mass:
+    ``(1/k_frac) * max|x|`` (the ``ef_topk_roundtrip`` tested bound)."""
+    if not 0.0 < k_frac <= 1.0:
+        raise ValueError(f"k_frac must be in (0, 1], got {k_frac}")
+
+    def rt(residual, x):
+        k = max(1, int(round(k_frac * int(jnp.size(x)))))
+        return ef_topk_roundtrip(residual, x, k)
+
+    return _register(UplinkCodec(
+        _parameterized_name("topk_ef", k_frac), ratio=2.0 * k_frac,
+        error_bound=1.0 / k_frac, roundtrip=rt))
+
+
+def topk_int8_ef_codec(k_frac: float = 0.1) -> UplinkCodec:
+    """The composed codec: top-k sparsify, then int8-quantize the
+    surviving values (1-byte value + 4-byte index per kept coordinate ->
+    ratio ``1.25*k_frac``; a third of ``int8_ef`` at k=10%). One shared
+    residual carries both error sources, so the bounds add:
+    ``1/k_frac + 2/127`` (property-tested under composition)."""
+    if not 0.0 < k_frac <= 1.0:
+        raise ValueError(f"k_frac must be in (0, 1], got {k_frac}")
+
+    def rt(residual, x):
+        return _topk_int8_roundtrip(residual, x, k_frac)
+
+    return _register(UplinkCodec(
+        _parameterized_name("topk_int8_ef", k_frac), ratio=1.25 * k_frac,
+        error_bound=1.0 / k_frac + 2.0 * _INT8_QUANTUM, roundtrip=rt))
+
+
+# The registry Link codec names resolve through. Constructors register
+# their instances (parameterized variants under k_frac-qualified names),
+# so pricing always resolves the codec whose roundtrip actually runs.
+_REGISTRY: Dict[str, UplinkCodec] = {}
+
+
+def _register(codec: UplinkCodec) -> UplinkCodec:
+    return _REGISTRY.setdefault(codec.name, codec)
+
+
+# The candidate set sla.pick_codec chooses from. Ordered loosely by
+# fidelity; pick_codec sorts by ratio itself.
+DEFAULT_CODECS: Sequence[UplinkCodec] = (
+    _register(identity_codec()),
+    _register(int8_ef_codec()),
+    topk_ef_codec(),
+    topk_int8_ef_codec(),
+)
+
+
+_PARAM_NAME = re.compile(r"^(topk_ef|topk_int8_ef)_k([0-9.eE+-]+)$")
+_PARAM_CTORS = {"topk_ef": topk_ef_codec, "topk_int8_ef": topk_int8_ef_codec}
+
+
+def get_codec(name: str) -> UplinkCodec:
+    """Resolve a codec by its registry name (as stored on a Link).
+
+    Parameterized names following the ``_parameterized_name`` scheme
+    (``topk_ef_k0.25``) are constructed on demand, so a name arriving
+    from config/serialization resolves without the matching constructor
+    having run in this process."""
+    codec = _REGISTRY.get(name)
+    if codec is not None:
+        return codec
+    m = _PARAM_NAME.match(name)
+    if m is not None:
+        try:
+            return _PARAM_CTORS[m.group(1)](float(m.group(2)))
+        except ValueError as e:
+            raise KeyError(f"bad uplink codec name {name!r}: {e}") from None
+    raise KeyError(f"unknown uplink codec {name!r}; known: "
+                   f"{sorted(_REGISTRY)} (or a parameterized "
+                   f"'topk_ef_k<frac>' / 'topk_int8_ef_k<frac>' name)")

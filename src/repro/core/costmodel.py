@@ -1,16 +1,27 @@
-"""Analytic three-term cost model shared by the placement optimizer, the
-offload controller, and the self-tuner (S2CE O1/O2 "smart resource
-management"). The same v5e constants ground the §Roofline report, so
-orchestrator decisions and the perf analysis speak one language.
+"""Analytic cost model + cluster topology API shared by the placement
+optimizer, the offload controller, and the self-tuner (S2CE O1/O2 "smart
+resource management"). The same v5e constants ground the §Roofline
+report, so orchestrator decisions and the perf analysis speak one
+language.
 
-Resources are heterogeneous pools (cloud TPU pods, edge nodes); operators
-are stream-pipeline stages with per-event flops/bytes/output-bytes costs.
+Resources are heterogeneous pools (cloud TPU pods, edge nodes); a
+:class:`ClusterSpec` names any number of them and the directed
+:class:`Link` objects between them (bandwidth, latency, and the uplink
+codec compressing bytes on that link); operators are stream-pipeline
+stages with per-event flops/bytes/output-bytes costs.
+
+DAG plan latency is the **critical path** over the op DAG: each op
+contributes its compute latency, each crossing flow edge the latency of
+the link it rides. For a linear chain the critical path is the whole
+chain (one path), so chain plans price identically to the historical
+per-op sum — the PR 2/3 parity the tests pin down.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections.abc import Mapping
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
 
 from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
 
@@ -40,6 +51,154 @@ CLOUD_POD = Resource("cloud", "cloud", chips=256, flops=PEAK_FLOPS,
 
 
 @dataclass(frozen=True)
+class Link:
+    """A directed network link between two named pools.
+
+    ``codec`` names the :class:`~repro.core.codecs.UplinkCodec` that
+    compresses every byte shipped over this link — plans price crossings
+    at ``codec.wire_bytes(payload)`` and the orchestrator applies the
+    same codec to tensors that actually cross at runtime.
+    """
+    src: str
+    dst: str
+    bw: float                  # bytes/s
+    latency: float             # seconds per message
+    codec: str = "identity"
+
+    def wire_bytes(self, raw_bytes: float) -> float:
+        from repro.core.codecs import get_codec
+        return get_codec(self.codec).wire_bytes(raw_bytes)
+
+
+class ClusterSpec(Mapping):
+    """First-class cluster topology: named :class:`Resource` pools (any
+    number of edge pools and cloud pods) plus explicit directed
+    :class:`Link` objects between them.
+
+    The spec is a ``Mapping[str, Resource]`` over its pools, so legacy
+    call sites that iterate a flat resource dict keep working unchanged;
+    every cost/placement entry point coerces through :meth:`of`, which
+    wraps a plain dict in a spec with *derived default links*: for any
+    ``(src, dst)`` pair without a declared link, bandwidth is the slower
+    side's ``net_bw`` and latency the slower side's ``net_latency`` —
+    exactly the historical "charge the slow side" rule, so a wrapped
+    two-pool dict prices identically to the old flat-dict model.
+    """
+
+    def __init__(self, pools: Union[Dict[str, Resource], Sequence[Resource]],
+                 links: Iterable[Link] = ()):
+        if isinstance(pools, Mapping):
+            self.pools: Dict[str, Resource] = dict(pools)
+        else:
+            seq = tuple(pools)
+            self.pools = {r.name: r for r in seq}
+            if len(self.pools) != len(seq):
+                raise ValueError("duplicate pool names in ClusterSpec")
+        self._links: Dict[Tuple[str, str], Link] = {}
+        for ln in links:
+            for end in (ln.src, ln.dst):
+                if end not in self.pools:
+                    raise ValueError(f"link {ln.src}->{ln.dst} references "
+                                     f"unknown pool {end!r}")
+            try:    # fail at construction, not deep inside cost evaluation
+                from repro.core.codecs import get_codec
+                get_codec(ln.codec)
+            except KeyError as e:
+                raise ValueError(
+                    f"link {ln.src}->{ln.dst}: {e.args[0]}") from None
+            self._links[(ln.src, ln.dst)] = ln
+
+    # -- construction helpers ----------------------------------------------
+    @classmethod
+    def of(cls, resources: Union["ClusterSpec", Dict[str, Resource]]
+           ) -> "ClusterSpec":
+        """Coerce a flat ``{name: Resource}`` dict (the deprecated two-pool
+        style) or an existing spec into a ClusterSpec."""
+        if isinstance(resources, cls):
+            return resources
+        return cls(dict(resources))
+
+    @classmethod
+    def edge_cloud(cls, edge: Resource = EDGE_NODE,
+                   cloud: Resource = CLOUD_POD) -> "ClusterSpec":
+        """The classic one-edge/one-cloud topology (back-compat shim for
+        pre-ClusterSpec call sites; prefer declaring pools + links)."""
+        return cls({edge.name: edge, cloud.name: cloud})
+
+    # -- Mapping interface over pools --------------------------------------
+    def __getitem__(self, name: str) -> Resource:
+        return self.pools[name]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.pools)
+
+    def __len__(self) -> int:
+        return len(self.pools)
+
+    # -- topology views -----------------------------------------------------
+    @property
+    def links(self) -> Tuple[Link, ...]:
+        return tuple(self._links.values())
+
+    def pools_of_kind(self, kind: str) -> List[Resource]:
+        return [r for r in self.pools.values() if r.kind == kind]
+
+    @property
+    def edge_pools(self) -> List[Resource]:
+        return self.pools_of_kind("edge")
+
+    @property
+    def cloud_pools(self) -> List[Resource]:
+        return self.pools_of_kind("cloud")
+
+    def default_source(self) -> str:
+        """Where the stream originates: the first edge pool (S2CE ingests
+        at the edge gateway), or "" when the spec has no edge pools."""
+        edges = self.edge_pools
+        return edges[0].name if edges else ""
+
+    def link(self, src: str, dst: str) -> Link:
+        """The declared link ``src -> dst``, or the derived default: the
+        slower endpoint's ``net_bw``/``net_latency`` and the identity
+        codec (the historical charge-the-slow-side rule)."""
+        ln = self._links.get((src, dst))
+        if ln is not None:
+            return ln
+        a, b = self.pools[src], self.pools[dst]
+        # strict <: on equal net_bw the historical rule charged the
+        # destination side (``prev if prev.net_bw < res.net_bw else res``)
+        slow = a if a.net_bw < b.net_bw else b
+        return Link(src, dst, bw=slow.net_bw, latency=slow.net_latency)
+
+    def with_uplink_codec(self, codec: str,
+                          override: bool = False) -> "ClusterSpec":
+        """A copy of this spec with ``codec`` attached to edge->cloud
+        uplinks (declared links keep their bw/latency; missing uplinks
+        are materialized from the derived defaults). This is how the
+        SLA-chosen codec is attached to the topology.
+
+        By default only uplinks that don't already declare a lossy codec
+        are rewritten — a user's per-link codec declaration wins over
+        the blanket choice; pass ``override=True`` to replace those too.
+        """
+        links = dict(self._links)
+        for e in self.edge_pools:
+            for c in self.cloud_pools:
+                ln = self.link(e.name, c.name)
+                if override or ln.codec == "identity":
+                    links[(e.name, c.name)] = replace(ln, codec=codec)
+        return ClusterSpec(self.pools, links.values())
+
+    def __repr__(self) -> str:
+        pools = ", ".join(f"{n}:{r.kind}" for n, r in self.pools.items())
+        return (f"ClusterSpec({pools}; "
+                f"{len(self._links)} declared links)")
+
+
+ResourcesLike = Union[ClusterSpec, Dict[str, Resource]]
+
+
+@dataclass(frozen=True)
 class OperatorCost:
     """Per-event costs of a pipeline stage."""
     name: str
@@ -65,60 +224,67 @@ def transfer_time(bytes_per_event: float, rate: float, res: Resource) -> float:
 @dataclass
 class PipelinePlan:
     """Assignment of each stage to a resource + derived metrics."""
-    assignment: Dict[str, str]            # op name -> resource name
+    assignment: Dict[str, str]            # op name -> pool name
     utilization: Dict[str, float] = field(default_factory=dict)
     latency_s: float = 0.0
-    uplink_utilization: float = 0.0
+    uplink_utilization: float = 0.0       # bottleneck link utilization
+    link_utilization: Dict[Tuple[str, str], float] = field(
+        default_factory=dict)             # per directed link
     energy_w: float = 0.0
     feasible: bool = True
     notes: List[str] = field(default_factory=list)
 
 
 def evaluate_plan(ops: List[OperatorCost], assign: Dict[str, str],
-                  resources: Dict[str, Resource], rate: float,
+                  resources: ResourcesLike, rate: float,
                   source: Optional[str] = None) -> PipelinePlan:
     """Evaluate a linear pipeline: stage order = list order; data crosses
-    the uplink wherever consecutive stages sit on different resources.
+    the network wherever consecutive stages sit on different pools, priced
+    on the connecting :class:`Link` (codec-compressed bytes, link latency).
 
-    ``source`` names the resource the stream *originates* at — by default
-    the first edge pool (S2CE ingests at the edge gateway), so an all-cloud
-    plan pays the raw-event uplink instead of getting it for free. Without
-    this charge every placement degenerates to all-cloud and the cut never
-    moves. Pass ``source=""`` to disable (data already at rest in the
-    cloud).
+    ``source`` names the pool the stream *originates* at — by default the
+    spec's first edge pool (S2CE ingests at the edge gateway), so an
+    all-cloud plan pays the raw-event uplink instead of getting it for
+    free. Without this charge every placement degenerates to all-cloud
+    and the cut never moves. Pass ``source=""`` to disable (data already
+    at rest in the cloud).
     """
+    spec = ClusterSpec.of(resources)
     if source is None:
-        source = next((r.name for r in resources.values()
-                       if r.kind == "edge"), "")
+        source = spec.default_source()
     plan = PipelinePlan(dict(assign))
     latency = 0.0
     energy = 0.0
-    uplink = 0.0
-    per_res_util: Dict[str, float] = {r: 0.0 for r in resources}
-    prev_res = resources[source] if source else None
+    link_bytes: Dict[Tuple[str, str], float] = {}
+    per_res_util: Dict[str, float] = {r: 0.0 for r in spec}
+    prev = source if source else None
     in_bytes = ops[0].bytes_per_event if ops else 0.0
     for op in ops:
-        res = resources[assign[op.name]]
+        rname = assign[op.name]
+        res = spec.pools[rname]
         if not op.edge_capable and res.kind == "edge":
             plan.feasible = False
             plan.notes.append(f"{op.name} not edge-capable")
         u = stage_time(op, res, rate)
-        per_res_util[res.name] = per_res_util.get(res.name, 0.0) + u
+        per_res_util[rname] = per_res_util.get(rname, 0.0) + u
         latency += op.flops_per_event / res.total_flops
         energy += u * res.energy_w * res.chips
-        if prev_res is not None and prev_res.name != res.name:
-            # hop between pools: uplink cost on the slower side
-            slow = prev_res if prev_res.net_bw < res.net_bw else res
-            uplink += transfer_time(in_bytes, rate, slow)
-            latency += slow.net_latency
+        if prev is not None and prev != rname:
+            ln = spec.link(prev, rname)
+            link_bytes[(prev, rname)] = (link_bytes.get((prev, rname), 0.0)
+                                         + ln.wire_bytes(in_bytes))
+            latency += ln.latency
         in_bytes = op.out_bytes_per_event
-        prev_res = res
+        prev = rname
         if op.state_bytes > res.mem_cap * res.chips:
             plan.feasible = False
-            plan.notes.append(f"{op.name} state exceeds {res.name} memory")
+            plan.notes.append(f"{op.name} state exceeds {rname} memory")
     plan.utilization = per_res_util
     plan.latency_s = latency
-    plan.uplink_utilization = uplink
+    plan.link_utilization = {
+        key: b * rate / spec.link(*key).bw for key, b in link_bytes.items()}
+    plan.uplink_utilization = (max(plan.link_utilization.values())
+                               if plan.link_utilization else 0.0)
     plan.energy_w = energy
     return _finalize_capacity(plan)
 
@@ -128,103 +294,125 @@ def _finalize_capacity(plan: PipelinePlan) -> PipelinePlan:
         if u > 1.0:
             plan.feasible = False
             plan.notes.append(f"{r} over capacity ({u:.2f})")
-    if plan.uplink_utilization > 1.0:
-        plan.feasible = False
-        plan.notes.append(
-            f"uplink over capacity ({plan.uplink_utilization:.2f})")
+    for (src, dst), u in plan.link_utilization.items():
+        if u > 1.0:
+            plan.feasible = False
+            plan.notes.append(f"link {src}->{dst} over capacity ({u:.2f})")
     return plan
 
 
 def evaluate_graph_plan(ops: List[OperatorCost],
                         edges: Sequence[Tuple[str, str]],
                         assign: Dict[str, str],
-                        resources: Dict[str, Resource], rate: float,
+                        resources: ResourcesLike, rate: float,
                         source: Optional[str] = None,
                         source_consumers: Sequence[str] = (),
                         source_bytes: Optional[float] = None
                         ) -> PipelinePlan:
-    """Evaluate an operator *DAG*: ``edges`` are the dataflow edges
-    ``(producer, consumer)``; bytes cross the uplink on every edge whose
-    endpoints sit on different resources, priced at the producer's
-    ``out_bytes_per_event`` — per crossing edge, not at one cut point. A
-    producer feeding several consumers on the same remote resource ships
-    its output once per link (multicast), so crossings are grouped by
-    ``(producer, remote resource)``; ``net_latency`` is paid once per
-    distinct resource link (parallel messages share the hop), which for a
-    chain's single cut point is exactly the linear model's one-hop charge.
+    """Evaluate an operator *DAG* over a :class:`ClusterSpec`: ``edges``
+    are the dataflow edges ``(producer, consumer)``, given with ``ops``
+    in topological list order; bytes cross the network on every edge
+    whose endpoints sit on different pools, priced at the producer's
+    ``out_bytes_per_event`` compressed by the crossing :class:`Link`'s
+    codec — per crossing edge, not at one cut point. A producer feeding
+    several consumers on the same remote pool ships its output once per
+    link (multicast), so crossings are grouped by ``(producer, remote
+    pool)``. Link *bandwidth* feasibility is tracked per directed link
+    (``link_utilization``; ``uplink_utilization`` reports the bottleneck
+    link).
 
-    ``source`` names the resource the stream originates at (default: the
-    first edge pool, as in :func:`evaluate_plan`); ``source_consumers``
-    are the ops that read raw-stream channels no op produces, and the raw
-    event (``source_bytes``) is shipped once to every remote resource one
-    of them sits on — an all-cloud plan pays the raw-event uplink.
+    Plan latency is the **critical path** of the op DAG: each op node
+    weighs its compute latency, each crossing edge adds the latency of
+    the link it rides, and the plan's latency is the longest source-to-
+    sink path. Parallel branches therefore overlap instead of summing —
+    and a linear chain (one path) reproduces the historical per-op-sum
+    price exactly, which keeps chain plans parity-identical to
+    :func:`evaluate_plan`.
+
+    ``source`` names the pool the stream originates at (default: the
+    spec's first edge pool); ``source_consumers`` are the ops that read
+    raw-stream channels no op produces, and the raw event
+    (``source_bytes``) is shipped once to every remote pool one of them
+    sits on — an all-cloud plan pays the raw-event uplink.
 
     Backhaul is not a supported data path: a flow edge from a cloud pool
     down to an edge pool (routing a high-rate stream back over the
     constrained link so a *slower* node can consume it) marks the plan
-    infeasible. Feasible assignments are therefore exactly the
-    downward-closed frontier cuts, which is what makes the frontier
-    search provably complete against the exhaustive oracle.
-
-    For a chain (edges = consecutive pairs, source consumed by the first
-    op) this reproduces :func:`evaluate_plan` exactly on any
-    backhaul-free assignment.
+    infeasible. The edge-resident set of any feasible assignment is
+    therefore downward-closed, which is what makes the frontier search
+    (over frontiers x within-kind pool choices) provably complete
+    against the exhaustive oracle.
     """
+    spec = ClusterSpec.of(resources)
     if source is None:
-        source = next((r.name for r in resources.values()
-                       if r.kind == "edge"), "")
+        source = spec.default_source()
     by_name = {op.name: op for op in ops}
     plan = PipelinePlan(dict(assign))
-    latency = 0.0
     energy = 0.0
-    uplink = 0.0
-    per_res_util: Dict[str, float] = {r: 0.0 for r in resources}
+    per_res_util: Dict[str, float] = {r: 0.0 for r in spec}
+    node_lat: Dict[str, float] = {}
     for op in ops:
-        res = resources[assign[op.name]]
+        rname = assign[op.name]
+        res = spec.pools[rname]
         if not op.edge_capable and res.kind == "edge":
             plan.feasible = False
             plan.notes.append(f"{op.name} not edge-capable")
         u = stage_time(op, res, rate)
-        per_res_util[res.name] = per_res_util.get(res.name, 0.0) + u
-        latency += op.flops_per_event / res.total_flops
+        per_res_util[rname] = per_res_util.get(rname, 0.0) + u
+        node_lat[op.name] = op.flops_per_event / res.total_flops
         energy += u * res.energy_w * res.chips
         if op.state_bytes > res.mem_cap * res.chips:
             plan.feasible = False
-            plan.notes.append(f"{op.name} state exceeds {res.name} memory")
-    # Bytes are charged per crossing edge (bandwidth is consumed per
-    # message), but net_latency once per distinct resource *link*: all
-    # crossings of one uplink ride it in parallel, not serially.
-    links = set()
-    # the raw stream crosses once to every remote pool a source-consuming
-    # op was placed on
+            plan.notes.append(f"{op.name} state exceeds {rname} memory")
+    # -- network: bytes per crossing (grouped per (producer, remote pool)
+    # for multicast), bandwidth per directed link, codec-compressed ------
+    link_bytes: Dict[Tuple[str, str], float] = {}
+
+    def ship(src: str, dst: str, raw_bytes: float):
+        ln = spec.link(src, dst)
+        link_bytes[(src, dst)] = (link_bytes.get((src, dst), 0.0)
+                                  + ln.wire_bytes(raw_bytes))
+
+    source_hop: Dict[str, float] = {}    # consumer pool -> entry latency
     if source:
         sb = (source_bytes if source_bytes is not None else
               max((by_name[c].bytes_per_event for c in source_consumers),
                   default=0.0))
-        src = resources[source]
         for rname in sorted({assign[c] for c in source_consumers
                              if assign[c] != source}):
-            res = resources[rname]
-            slow = src if src.net_bw < res.net_bw else res
-            uplink += transfer_time(sb, rate, slow)
-            links.add(frozenset((source, rname)))
-    # each crossing edge ships the producer's output on the slower side
+            ship(source, rname, sb)
+            source_hop[rname] = spec.link(source, rname).latency
     crossings = sorted({(p, assign[c]) for p, c in edges
                         if assign[p] != assign[c]})
     for p, rname in crossings:
-        rp, rc = resources[assign[p]], resources[rname]
+        rp, rc = spec.pools[assign[p]], spec.pools[rname]
         if rp.kind == "cloud" and rc.kind == "edge":
             plan.feasible = False
             plan.notes.append(f"backhaul {p}->{rname} (cloud->edge) "
                               "not supported")
-        slow = rp if rp.net_bw < rc.net_bw else rc
-        uplink += transfer_time(by_name[p].out_bytes_per_event, rate, slow)
-        links.add(frozenset((rp.name, rname)))
-    for link in links:
-        slow = min((resources[r] for r in link), key=lambda r: r.net_bw)
-        latency += slow.net_latency
+        ship(assign[p], rname, by_name[p].out_bytes_per_event)
+    # -- latency: critical path over (node compute + crossing-link hops).
+    # ops is in topological order, so one forward sweep suffices.
+    finish: Dict[str, float] = {}
+    parents: Dict[str, List[str]] = {}
+    for p, c in edges:
+        parents.setdefault(c, []).append(p)
+    src_consumers = set(source_consumers)
+    for op in ops:
+        start = 0.0
+        if source and op.name in src_consumers:
+            start = source_hop.get(assign[op.name], 0.0)
+        for p in parents.get(op.name, ()):
+            t = finish.get(p, node_lat.get(p, 0.0))
+            if assign[p] != assign[op.name]:
+                t += spec.link(assign[p], assign[op.name]).latency
+            start = max(start, t)
+        finish[op.name] = start + node_lat[op.name]
     plan.utilization = per_res_util
-    plan.latency_s = latency
-    plan.uplink_utilization = uplink
+    plan.latency_s = max(finish.values()) if finish else 0.0
+    plan.link_utilization = {
+        key: b * rate / spec.link(*key).bw for key, b in link_bytes.items()}
+    plan.uplink_utilization = (max(plan.link_utilization.values())
+                               if plan.link_utilization else 0.0)
     plan.energy_w = energy
     return _finalize_capacity(plan)

@@ -6,21 +6,26 @@ tracker reports violations. Replanning uses the same cost model as static
 placement; hysteresis (enter/exit thresholds + cooldown) prevents
 thrashing when the rate oscillates around a cut point.
 
-Decisions carry the full *assignment* — the ``frontier``: the
-downward-closed set of op names resident on the edge — not just a cut
-index. For a linear pipeline the frontier is exactly the prefix
-``ops[:cut]`` and ``cut`` keeps its old meaning; for an operator DAG the
-frontier can hold parallel branches independently and ``cut`` reports its
-size. Hysteresis and the migration count key on frontier *identity* (the
-plan actually changing where ops run), not on the scalar index.
+Decisions carry the full *assignment* — op name -> pool name over the
+job's :class:`~repro.core.costmodel.ClusterSpec` — plus the ``frontier``
+view: the downward-closed set of op names resident on *any* edge pool.
+For a linear pipeline the frontier is exactly the prefix ``ops[:cut]``
+and ``cut`` keeps its old meaning; for an operator DAG the frontier can
+hold parallel branches independently and ``cut`` reports its size.
+Hysteresis and the migration count key on **plan identity** — the pool
+assignment (which pool each op runs on, not merely which side of the
+cut) together with the uplink codec — so a multi-pool rebalance that
+keeps the frontier set but moves ops between pods still counts as a
+migration.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, List, Optional
+from typing import Dict, FrozenSet, List, Optional, Tuple
 
-from repro.core.costmodel import OperatorCost, PipelinePlan, Resource
+from repro.core.costmodel import (ClusterSpec, OperatorCost, PipelinePlan,
+                                  ResourcesLike)
 from repro.core.placement import Objective, place, place_frontier
 from repro.core.sla import SLATracker
 
@@ -32,37 +37,62 @@ class OffloadDecision:
     cut: int                 # edge-resident op count (prefix cut if linear)
     reason: str
     plan: PipelinePlan
-    frontier: FrozenSet[str] = frozenset()   # op names on the edge
+    frontier: FrozenSet[str] = frozenset()   # op names on any edge pool
+    assignment: Dict[str, str] = field(default_factory=dict)
+    codec: str = "identity"                  # uplink codec in force
 
 
 @dataclass
 class OffloadController:
     ops: List[OperatorCost]
-    resources: Dict[str, Resource]
+    resources: ResourcesLike
     objective: Objective = field(default_factory=Objective)
     # an OpGraph to plan over frontier cuts; None -> prefix cuts over `ops`
     graph: Optional[object] = None
+    # uplink codec the plan executes with (part of plan identity)
+    codec: str = "identity"
     headroom: float = 1.3      # replan when rate moves x1.3 outside band
     cooldown: int = 5          # min decisions between migrations
     planned_rate: float = 0.0
     cut: int = 0
     frontier: FrozenSet[str] = frozenset()
+    assignment: Dict[str, str] = field(default_factory=dict)
     _last_change: int = -10**9
     history: List[OffloadDecision] = field(default_factory=list)
 
+    def __post_init__(self):
+        self.resources = ClusterSpec.of(self.resources)
+        self._edge_pools = {r.name for r in self.resources.edge_pools}
+
+    def _identity(self, assignment: Dict[str, str]
+                  ) -> Tuple[Tuple[Tuple[str, str], ...], str]:
+        """Plan identity: pool assignment + codec (hashable)."""
+        return tuple(sorted(assignment.items())), self.codec
+
+    def _frontier_of(self, assignment: Dict[str, str]) -> FrozenSet[str]:
+        return frozenset(n for n, r in assignment.items()
+                         if r in self._edge_pools)
+
     def _plan(self, rate: float):
         if self.graph is not None:
-            plan, frontier = place_frontier(self.graph, self.resources,
-                                            rate, self.objective)
-            return plan, frontier
-        plan, cut = place(self.ops, self.resources, rate, self.objective)
-        return plan, frozenset(op.name for op in self.ops[:cut])
+            plan, _ = place_frontier(self.graph, self.resources,
+                                     rate, self.objective)
+        else:
+            plan, _ = place(self.ops, self.resources, rate, self.objective)
+        return plan, self._frontier_of(plan.assignment)
+
+    def _decide(self, step: int, rate: float, reason: str,
+                plan: PipelinePlan, frontier: FrozenSet[str]
+                ) -> OffloadDecision:
+        return OffloadDecision(step, rate, len(frontier), reason, plan,
+                               frontier, dict(plan.assignment), self.codec)
 
     def initial_plan(self, rate: float) -> OffloadDecision:
         plan, frontier = self._plan(rate)
         self.planned_rate, self.frontier = rate, frontier
+        self.assignment = dict(plan.assignment)
         self.cut = len(frontier)
-        d = OffloadDecision(0, rate, self.cut, "initial", plan, frontier)
+        d = self._decide(0, rate, "initial", plan, frontier)
         self.history.append(d)
         return d
 
@@ -74,20 +104,22 @@ class OffloadController:
         sla_bad = sla is not None and not sla.ok()
         if (not out_of_band and not sla_bad) or \
                 step - self._last_change < self.cooldown:
-            d = OffloadDecision(step, rate, self.cut, "hold",
-                                self.history[-1].plan, self.frontier)
-            return d
+            return OffloadDecision(step, rate, self.cut, "hold",
+                                   self.history[-1].plan, self.frontier,
+                                   dict(self.assignment), self.codec)
         plan, frontier = self._plan(rate)
         reason = "sla" if sla_bad else (
             "rate_up" if rate > self.planned_rate else "rate_down")
-        if frontier != self.frontier:
+        if self._identity(plan.assignment) != self._identity(self.assignment):
             self._last_change = step
         self.planned_rate, self.frontier = rate, frontier
+        self.assignment = dict(plan.assignment)
         self.cut = len(frontier)
-        d = OffloadDecision(step, rate, self.cut, reason, plan, frontier)
+        d = self._decide(step, rate, reason, plan, frontier)
         self.history.append(d)
         return d
 
     def migrations(self) -> int:
-        fs = [d.frontier for d in self.history]
-        return sum(1 for a, b in zip(fs, fs[1:]) if a != b)
+        ids = [(tuple(sorted(d.assignment.items())), d.codec)
+               for d in self.history]
+        return sum(1 for a, b in zip(ids, ids[1:]) if a != b)

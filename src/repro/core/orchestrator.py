@@ -6,11 +6,16 @@ linear :class:`~repro.core.pipeline.Pipeline` or a fan-out/rejoin
 normalize -> sketch -> sample -> train -> drift chain), the ML payload,
 and an SLA. The orchestrator:
 
-  1. costs the pipeline's op graph and *places* it on cloud/edge pools
-     (core/placement) — the same op list the executor runs,
-  2. executes the planned partition: the frontier (downward-closed op
-     set; a prefix for linear pipelines) as the edge segment, the rest
-     as the cloud segment (core/pipeline),
+  1. costs the pipeline's op graph and *places* it over the job's
+     :class:`~repro.core.costmodel.ClusterSpec` (any number of edge
+     pools / cloud pods with codec-carrying links; core/placement) —
+     the same op list the executor runs. The SLA error budget picks the
+     cheapest admissible uplink codec (core/sla.pick_codec), attached
+     to every edge->cloud link,
+  2. executes the planned partition: the frontier (ops resident on any
+     edge pool; a prefix for linear pipelines) as the edge segment, the
+     rest as the cloud segment (core/pipeline), applying the chosen
+     codec's wire round-trip to batches crossing the uplink,
   3. monitors rate + SLA, *re-plans* via the offload controller, and
      re-partitions the graph when the assignment migrates,
   4. reacts to drift alarms through each op's declared drift response,
@@ -35,11 +40,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.costmodel import CLOUD_POD, EDGE_NODE, Resource
+from repro.core.costmodel import CLOUD_POD, EDGE_NODE, ClusterSpec, Resource
 from repro.core.offload import OffloadController
 from repro.core.pipeline import OpGraph, Pipeline, standard_stream_pipeline
 from repro.core.placement import Objective
-from repro.core.sla import SLA, SLATracker
+from repro.core.sla import SLA, SLATracker, pick_codec
 from repro.dist import elastic
 
 
@@ -51,6 +56,10 @@ class StreamJob:
     sla: SLA = field(default_factory=SLA)
     sample_rate: float = 0.5
     drift_detector: str = "ddm"          # ddm|eddm|ph|adwin
+    # full cluster topology (any number of edge pools / cloud pods with
+    # explicit links); None -> the classic two-pool spec built from
+    # edge_resource/cloud_resource below (kept for back-compat)
+    cluster: Optional[ClusterSpec] = None
     edge_resource: Resource = EDGE_NODE
     cloud_resource: Resource = CLOUD_POD
     objective: Objective = field(default_factory=Objective)
@@ -78,6 +87,7 @@ class JobMetrics:
     # assignment record per batch: the frozenset of edge-resident op names
     assignments: List[FrozenSet[str]] = field(default_factory=list)
     outputs: List[dict] = field(default_factory=list)    # when recording
+    codec: str = "identity"                              # uplink codec used
 
 
 class Orchestrator:
@@ -85,8 +95,31 @@ class Orchestrator:
 
     def __init__(self, job: StreamJob):
         self.job = job
-        self.resources = {job.edge_resource.name: job.edge_resource,
-                          job.cloud_resource.name: job.cloud_resource}
+        # the cluster topology placement runs over: the job's ClusterSpec,
+        # or the classic two-pool spec from edge/cloud resources. The SLA
+        # error budget picks the cheapest admissible uplink codec, which
+        # fills every uplink that doesn't declare its own (pricing) AND
+        # is applied to batches crossing segments at runtime (execution).
+        # A user-declared per-link codec wins over the blanket pick but
+        # must itself fit the budget — a lossy topology under a lossless
+        # SLA is a configuration conflict, not something to paper over.
+        spec = (ClusterSpec.of(job.cluster) if job.cluster is not None
+                else ClusterSpec.edge_cloud(job.edge_resource,
+                                            job.cloud_resource))
+        self.codec = pick_codec(job.sla)
+        self.cluster = spec.with_uplink_codec(self.codec.name)
+        from repro.core.codecs import get_codec
+        for e in self.cluster.edge_pools:
+            for c in self.cluster.cloud_pools:
+                ln = self.cluster.link(e.name, c.name)
+                bound = get_codec(ln.codec).error_bound
+                if bound > job.sla.error_budget + 1e-12:
+                    raise ValueError(
+                        f"link {ln.src}->{ln.dst} declares codec "
+                        f"{ln.codec!r} (error bound {bound:.4g}) but the "
+                        f"SLA error budget is {job.sla.error_budget:.4g}; "
+                        f"raise the budget or drop the link codec")
+        self.resources = dict(self.cluster.pools)
         self.pipeline = job.pipeline or standard_stream_pipeline(
             job.dim, sample_rate=job.sample_rate,
             drift_detector=job.drift_detector)
@@ -96,9 +129,14 @@ class Orchestrator:
         # the cost model prices the SAME op list the executor runs
         self.ops = self.pipeline.costs()
         self.controller = OffloadController(
-            self.ops, self.resources, job.objective,
-            graph=self.pipeline if self.is_graph else None)
+            self.ops, self.cluster, job.objective,
+            graph=self.pipeline if self.is_graph else None,
+            codec=self.codec.name)
         self.sla = SLATracker(job.sla)
+        # error-feedback residuals for the lossy uplink codec, keyed by
+        # batch channel (carried across steps so accumulated error stays
+        # within the codec's admitted bound)
+        self._uplink_residuals: Dict[str, object] = {}
         self.elastic = elastic.ElasticController(workers=job.workers,
                                                  max_workers=job.max_workers)
         self.states = self.pipeline.init_states()
@@ -106,6 +144,34 @@ class Orchestrator:
         self.frontier: FrozenSet[str] = frozenset()
         self.metrics = JobMetrics()
         self._ckpt_dir = job.ckpt_dir
+
+    # -- uplink codec: the wire transform between segments ------------------
+    def _uplink_fn(self):
+        """The batch transform applied where data crosses the edge->cloud
+        uplink, or None for a lossless (identity) codec. Float channels
+        round-trip the codec with per-channel error-feedback residuals;
+        integer/bool/PRNG channels cross uncompressed."""
+        if self.codec.lossless:
+            return None
+
+        def uplink(env):
+            out = dict(env)
+            for k, v in env.items():
+                if k == "rng" or not jnp.issubdtype(
+                        jnp.asarray(v).dtype, jnp.floating):
+                    continue
+                r = self._uplink_residuals.get(k)
+                if r is None or np.shape(r) != jnp.shape(v):
+                    r = self.codec.init_residual(v)
+                # residuals live on host (numpy): elastic rescales can
+                # move op state to a different mesh between steps, and an
+                # uncommitted carry follows the batch's devices
+                dec, r = self.codec.roundtrip(jnp.asarray(np.asarray(r)), v)
+                self._uplink_residuals[k] = np.asarray(r)
+                out[k] = dec
+            return out
+
+        return uplink
 
     # -- drift response: each op declares its own -------------------------
     def _apply_drift_response(self):
@@ -156,7 +222,10 @@ class Orchestrator:
             self.frontier = dec.frontier
         pinned = fixed_cut is not None or fixed_frontier is not None
         self.cut = len(self.frontier)
-        self.metrics.decisions.append(f"0:init cut={self.cut}")
+        self.metrics.codec = self.codec.name
+        self.metrics.decisions.append(
+            f"0:init cut={self.cut} codec={self.codec.name}")
+        uplink = self._uplink_fn()
         for step, batch in enumerate(batches):
             t0 = time.perf_counter()
             bd = {k: jnp.asarray(v) for k, v in batch.data.items()}
@@ -166,10 +235,12 @@ class Orchestrator:
             bd["rng"] = jax.random.fold_in(root_rng, step)
             if self.is_graph:
                 self.states, out = self.pipeline.run(self.states, bd,
-                                                     self.frontier)
+                                                     self.frontier,
+                                                     uplink=uplink)
             else:
                 self.states, out = self.pipeline.run(self.states, bd,
-                                                     self.cut)
+                                                     self.cut,
+                                                     uplink=uplink)
             self.metrics.cuts.append(self.cut)
             self.metrics.assignments.append(self.frontier)
             if record_outputs:

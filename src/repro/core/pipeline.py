@@ -328,11 +328,18 @@ class OpGraph:
         return fn
 
     def _run_segments(self, states: Dict[str, Any], batch: Batch,
-                      segments: Sequence[Tuple[int, ...]]
+                      segments: Sequence[Tuple[int, ...]],
+                      uplink: Optional[Callable[[Batch], Batch]] = None
                       ) -> Tuple[Dict[str, Any], Batch]:
-        for idxs in segments:
+        for seg_idx, idxs in enumerate(segments):
             if not idxs:
                 continue
+            if seg_idx > 0 and uplink is not None:
+                # entering a non-edge segment crosses the edge->cloud
+                # uplink — whether the batch is edge-segment output or
+                # the raw stream (empty frontier: the all-cloud plan's
+                # priced raw-event crossing). Apply the wire codec.
+                batch = uplink(batch)
             sub = {self.ops[i].name: states[self.ops[i].name] for i in idxs}
             fn = self._segment_fn(tuple(idxs), batch)
             sub, batch = fn(sub, batch)
@@ -340,15 +347,19 @@ class OpGraph:
         return states, batch
 
     def run(self, states: Dict[str, Any], batch: Batch,
-            frontier: Iterable[str] = ()
+            frontier: Iterable[str] = (),
+            uplink: Optional[Callable[[Batch], Batch]] = None
             ) -> Tuple[Dict[str, Any], Batch]:
         """Execute under the downward-closed cut ``frontier``: member ops
         form the edge segment, the rest the cloud segment (either may be
-        empty); within each segment ops run in graph list order."""
+        empty); within each segment ops run in graph list order.
+        ``uplink`` (optional) transforms the batch dict where it crosses
+        from the edge segment to the cloud segment — the orchestrator
+        passes the SLA-chosen uplink codec's wire round-trip here."""
         f = self.check_frontier(frontier)
         edge = tuple(i for i, op in enumerate(self.ops) if op.name in f)
         cloud = tuple(i for i, op in enumerate(self.ops) if op.name not in f)
-        return self._run_segments(states, batch, (edge, cloud))
+        return self._run_segments(states, batch, (edge, cloud), uplink)
 
     def run_reference(self, states: Dict[str, Any], batch: Batch
                       ) -> Tuple[Dict[str, Any], Batch]:
@@ -405,15 +416,18 @@ class Pipeline(OpGraph):
         states[op.name] = st
         return states, env
 
-    def run(self, states: Dict[str, Any], batch: Batch, cut: int
+    def run(self, states: Dict[str, Any], batch: Batch, cut: int,
+            uplink: Optional[Callable[[Batch], Batch]] = None
             ) -> Tuple[Dict[str, Any], Batch]:
         """Execute under prefix cut ``cut``: ops[:cut] as the edge segment,
-        ops[cut:] as the cloud segment (either may be empty)."""
+        ops[cut:] as the cloud segment (either may be empty). ``uplink``
+        (optional) transforms the batch where it crosses the segments —
+        the orchestrator's codec hook."""
         if not 0 <= cut <= len(self.ops):
             raise ValueError(f"cut {cut} outside [0, {len(self.ops)}]")
         return self._run_segments(
             states, batch, (tuple(range(0, cut)),
-                            tuple(range(cut, len(self.ops)))))
+                            tuple(range(cut, len(self.ops)))), uplink)
 
     def run_reference(self, states: Dict[str, Any], batch: Batch
                       ) -> Tuple[Dict[str, Any], Batch]:

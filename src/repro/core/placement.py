@@ -1,17 +1,20 @@
 """Operator placement across heterogeneous cloud/edge pools (S2CE O2).
 
 Placement of a stream pipeline onto heterogeneous resources is NP-hard
-(§2.3 [17]); the tractable structure is the *downward-closed cut*: the
-optimal assignment puts an ancestor-closed set of operators on the edge
-and the rest on the cloud, because moving an op whose input already
-crossed the uplink back to the (slower) edge only adds transfers and
-compute latency. For a linear chain the downward-closed sets are the
-prefixes, so :func:`place` searches all prefix cuts exactly (unchanged
-from the linear IR); for an operator DAG, :func:`place_frontier`
-enumerates every downward-closed *frontier* of the graph — the antichain
-cuts — and prices each crossing edge individually. Both fall back to
-exhaustive assignment search on small graphs as the oracle the tests
-check against (:func:`place_exhaustive` / :func:`place_graph_exhaustive`).
+(§2.3 [17]); the tractable structure is the *downward-closed cut*: in
+any feasible assignment the edge-resident op set contains all of its own
+ancestors, because a cloud op feeding an edge op would route a high-rate
+stream back over the constrained link (backhaul — infeasible by the cost
+model). For a linear chain the downward-closed sets are the prefixes, so
+:func:`place` searches all prefix cuts exactly (unchanged from the
+linear IR); for an operator DAG over a :class:`ClusterSpec`,
+:func:`place_frontier` enumerates every downward-closed *frontier* of
+the graph and, when the spec declares several pools of a kind, every
+within-kind pool assignment (frontier ops across edge pools, the
+complement across cloud pods) — which covers exactly the backhaul-free
+assignments, so the search provably matches the exhaustive all-
+assignments oracle (:func:`place_graph_exhaustive`; hypothesis-tested on
+random small DAGs with multi-pool specs).
 """
 
 from __future__ import annotations
@@ -20,7 +23,8 @@ import itertools
 from dataclasses import dataclass
 from typing import Dict, FrozenSet, Iterator, List, Optional, Tuple
 
-from repro.core.costmodel import (OperatorCost, PipelinePlan, Resource,
+from repro.core.costmodel import (ClusterSpec, OperatorCost, PipelinePlan,
+                                  Resource, ResourcesLike,
                                   evaluate_graph_plan, evaluate_plan)
 
 
@@ -38,28 +42,38 @@ class Objective:
                 + self.uplink_weight * plan.uplink_utilization)
 
 
-def edge_cloud_pools(resources: Dict[str, Resource]
+def edge_cloud_pools(resources: ResourcesLike
                      ) -> Tuple[Resource, Resource]:
-    """The (edge, cloud) pool pair prefix-cut placement runs over.
+    """The (edge, cloud) pool pair two-pool placement runs over.
 
-    Explicitly takes the *first* pool of each kind (insertion order) when
-    several are present, and raises a clear ``ValueError`` when either
-    kind is missing — instead of the bare ``StopIteration`` a ``next()``
-    over an ill-formed resource dict used to surface.
+    .. deprecated::
+        This is the thin back-compat shim for the flat two-pool world:
+        it collapses a :class:`ClusterSpec` (or legacy resource dict) to
+        the *first* pool of each kind, ignoring any further pools and
+        their links. New code should pass a ``ClusterSpec`` to
+        :func:`place_frontier`, which places across every pool. The shim
+        keeps prefix-cut call sites and the PR 2/3 parity tests working
+        unchanged.
+
+    Raises a clear ``ValueError`` when either kind is missing — instead
+    of the bare ``StopIteration`` a ``next()`` over an ill-formed
+    resource dict used to surface.
     """
-    edges = [r for r in resources.values() if r.kind == "edge"]
-    clouds = [r for r in resources.values() if r.kind == "cloud"]
+    spec = ClusterSpec.of(resources)
+    edges, clouds = spec.edge_pools, spec.cloud_pools
     if not edges or not clouds:
-        kinds = sorted({r.kind for r in resources.values()})
+        kinds = sorted({r.kind for r in spec.values()})
         raise ValueError(
             "prefix-cut placement needs at least one 'edge' and one "
             f"'cloud' pool; resource dict has kinds {kinds or '(empty)'}")
     return edges[0], clouds[0]
 
 
-def prefix_cut_plans(ops: List[OperatorCost], resources: Dict[str, Resource],
+def prefix_cut_plans(ops: List[OperatorCost], resources: ResourcesLike,
                      rate: float):
-    """All plans of the form: stages[:k] on edge, stages[k:] on cloud."""
+    """All plans of the form: stages[:k] on edge, stages[k:] on cloud.
+    Two-pool only (first pool of each kind via the deprecated
+    :func:`edge_cloud_pools` shim)."""
     edge, cloud = edge_cloud_pools(resources)
     for k in range(len(ops) + 1):
         assign = {op.name: (edge.name if i < k else cloud.name)
@@ -67,7 +81,7 @@ def prefix_cut_plans(ops: List[OperatorCost], resources: Dict[str, Resource],
         yield k, evaluate_plan(ops, assign, resources, rate)
 
 
-def place(ops: List[OperatorCost], resources: Dict[str, Resource],
+def place(ops: List[OperatorCost], resources: ResourcesLike,
           rate: float, objective: Optional[Objective] = None
           ) -> Tuple[PipelinePlan, int]:
     """Best prefix-cut placement. Returns (plan, cut_index)."""
@@ -87,12 +101,12 @@ def place(ops: List[OperatorCost], resources: Dict[str, Resource],
     return best, best_k
 
 
-def place_exhaustive(ops: List[OperatorCost], resources: Dict[str, Resource],
+def place_exhaustive(ops: List[OperatorCost], resources: ResourcesLike,
                      rate: float, objective: Optional[Objective] = None
                      ) -> PipelinePlan:
     """Oracle: try every assignment (exponential; tests only)."""
     objective = objective or Objective()
-    names = list(resources)
+    names = list(ClusterSpec.of(resources))
     best, best_score = None, float("inf")
     for combo in itertools.product(names, repeat=len(ops)):
         assign = {op.name: r for op, r in zip(ops, combo)}
@@ -104,66 +118,111 @@ def place_exhaustive(ops: List[OperatorCost], resources: Dict[str, Resource],
 
 
 # ---------------------------------------------------------------------------
-# DAG placement: frontier (downward-closed) cuts over an OpGraph
+# DAG placement: frontier (downward-closed) cuts over an OpGraph, with
+# multi-pool assignment within each side of the cut
 # ---------------------------------------------------------------------------
 
 def _graph_plan(graph, assign: Dict[str, str],
-                resources: Dict[str, Resource], rate: float) -> PipelinePlan:
+                resources: ResourcesLike, rate: float) -> PipelinePlan:
     return evaluate_graph_plan(
         graph.costs(), graph.flow_edges, assign, resources, rate,
         source_consumers=graph.source_consumers,
         source_bytes=graph.source_bytes_per_event)
 
 
-def frontier_plans(graph, resources: Dict[str, Resource], rate: float
+def _frontier_assignments(names: List[str], frontier: FrozenSet[str],
+                          edge_names: List[str], cloud_names: List[str]
+                          ) -> Iterator[Dict[str, str]]:
+    """Every assignment that realizes ``frontier``: each frontier op on
+    one of the edge pools, each complement op on one of the cloud pods.
+    With one pool of each kind this yields exactly one assignment (the
+    classic two-pool cut)."""
+    f_ops = [n for n in names if n in frontier]
+    c_ops = [n for n in names if n not in frontier]
+    for e_combo in itertools.product(edge_names, repeat=len(f_ops)):
+        base = dict(zip(f_ops, e_combo))
+        for c_combo in itertools.product(cloud_names, repeat=len(c_ops)):
+            assign = dict(base)
+            assign.update(zip(c_ops, c_combo))
+            yield assign
+
+
+def frontier_plans(graph, resources: ResourcesLike, rate: float,
+                   objective: Optional[Objective] = None
                    ) -> Iterator[Tuple[FrozenSet[str], PipelinePlan]]:
-    """All plans of the form: a downward-closed frontier of ``graph`` on
-    the edge pool, its complement on the cloud pool. For a linear
-    :class:`~repro.core.pipeline.Pipeline` the frontiers are exactly the
-    prefixes, so this degenerates to :func:`prefix_cut_plans`."""
-    edge, cloud = edge_cloud_pools(resources)
+    """For every downward-closed frontier of ``graph``: the best plan
+    (under ``objective``) over all within-kind pool assignments — the
+    frontier across the spec's edge pools, its complement across the
+    cloud pods. For a one-edge/one-cloud spec each frontier has exactly
+    one assignment, so this degenerates to the classic two-pool frontier
+    enumeration (and, for a linear :class:`~repro.core.pipeline.Pipeline`,
+    to :func:`prefix_cut_plans`)."""
+    spec = ClusterSpec.of(resources)
+    objective = objective or Objective()
+    edges, clouds = spec.edge_pools, spec.cloud_pools
+    if not edges or not clouds:
+        kinds = sorted({r.kind for r in spec.values()})
+        raise ValueError(
+            "frontier placement needs at least one 'edge' and one 'cloud' "
+            f"pool; ClusterSpec has kinds {kinds or '(empty)'}")
+    e_names = [r.name for r in edges]
+    c_names = [r.name for r in clouds]
+    names = graph.names
     for frontier in graph.frontiers():
-        assign = {name: (edge.name if name in frontier else cloud.name)
-                  for name in graph.names}
-        yield frontier, _graph_plan(graph, assign, resources, rate)
+        best, best_score = None, float("inf")
+        for assign in _frontier_assignments(names, frontier,
+                                            e_names, c_names):
+            plan = _graph_plan(graph, assign, spec, rate)
+            s = objective.score(plan)
+            if best is None or s < best_score:
+                best, best_score = plan, s
+        yield frontier, best
 
 
-def place_frontier(graph, resources: Dict[str, Resource], rate: float,
+def place_frontier(graph, resources: ResourcesLike, rate: float,
                    objective: Optional[Objective] = None
                    ) -> Tuple[PipelinePlan, FrozenSet[str]]:
-    """Best frontier-cut placement of an operator DAG. Returns
-    ``(plan, frontier)`` where ``frontier`` is the edge-resident op set."""
+    """Best frontier-cut placement of an operator DAG over a
+    :class:`ClusterSpec` — multi-pool: each frontier side may split
+    across the pools of its kind, priced per crossing link with
+    codec-compressed bytes. Returns ``(plan, frontier)`` where
+    ``frontier`` is the edge-resident op set (``plan.assignment`` holds
+    the per-op pool detail)."""
     objective = objective or Objective()
     best, best_f, best_score = None, frozenset(), float("inf")
-    for frontier, plan in frontier_plans(graph, resources, rate):
+    for frontier, plan in frontier_plans(graph, resources, rate, objective):
         s = objective.score(plan)
         if s < best_score or (s == best_score and best is not None
                               and len(frontier) < len(best_f)):
             best, best_f, best_score = plan, frontier, s
     if best is None or not best.feasible:
-        # all-cloud fallback (the empty frontier is always structurally
-        # valid; may still be infeasible under extreme rates — caller
-        # must check .feasible)
-        _, cloud = edge_cloud_pools(resources)
+        # all-cloud fallback (the empty frontier on the first pod is
+        # always structurally valid; may still be infeasible under
+        # extreme rates — caller must check .feasible)
+        spec = ClusterSpec.of(resources)
+        cloud = spec.cloud_pools[0]
         assign = {name: cloud.name for name in graph.names}
-        best = _graph_plan(graph, assign, resources, rate)
+        best = _graph_plan(graph, assign, spec, rate)
         best_f = frozenset()
     return best, best_f
 
 
-def place_graph_exhaustive(graph, resources: Dict[str, Resource],
+def place_graph_exhaustive(graph, resources: ResourcesLike,
                            rate: float,
                            objective: Optional[Objective] = None
                            ) -> PipelinePlan:
     """Oracle for DAG placement: every assignment of every op to every
-    resource, including non-downward-closed ones (exponential; tests and
-    the benchmark harness only)."""
+    pool of the spec — including non-downward-closed and cross-kind-
+    scrambled ones (exponential; tests and the benchmark harness only).
+    With a multi-pool ClusterSpec this is the multi-pool oracle
+    :func:`place_frontier` is checked against."""
     objective = objective or Objective()
-    rnames = list(resources)
+    spec = ClusterSpec.of(resources)
+    rnames = list(spec)
     best, best_score = None, float("inf")
     for combo in itertools.product(rnames, repeat=len(graph.names)):
         assign = dict(zip(graph.names, combo))
-        plan = _graph_plan(graph, assign, resources, rate)
+        plan = _graph_plan(graph, assign, spec, rate)
         s = objective.score(plan)
         if best is None or s < best_score:
             best, best_score = plan, s

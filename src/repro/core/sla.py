@@ -1,11 +1,14 @@
 """SLA specification and tracking (S2CE S3: workload shift must not
-violate agreed SLAs)."""
+violate agreed SLAs), plus SLA-driven uplink codec admission: the
+orchestrator compresses the edge->cloud uplink with the *cheapest*
+:class:`~repro.core.codecs.UplinkCodec` whose tested accumulated-error
+bound fits the job's ``error_budget``."""
 
 from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
-from typing import Deque, Dict, Optional
+from typing import Deque, Dict, Iterable, Optional
 
 
 @dataclass(frozen=True)
@@ -14,6 +17,29 @@ class SLA:
     min_throughput: float = 0.0         # events/s
     max_staleness_s: float = 5.0        # model update staleness
     max_error_rate: Optional[float] = None
+    # accumulated relative error the uplink codec may introduce (the
+    # error-feedback residual bound, normalized by the stream's peak
+    # magnitude). 0.0 = lossless uplink required -> identity codec.
+    error_budget: float = 0.0
+
+
+def pick_codec(sla: SLA, candidates: Optional[Iterable] = None):
+    """The cheapest uplink codec the SLA admits.
+
+    A codec is admissible when its property-tested ``error_bound`` fits
+    within ``sla.error_budget``; among admissible candidates the one with
+    the smallest wire ``ratio`` wins (ties broken toward the smaller
+    error bound). The identity codec has bound 0.0 and is therefore
+    always admissible — a zero budget degrades gracefully to a lossless
+    uplink, never to an inadmissible codec.
+    """
+    from repro.core.codecs import DEFAULT_CODECS, identity_codec
+    cands = list(candidates) if candidates is not None else list(DEFAULT_CODECS)
+    budget = max(0.0, sla.error_budget)
+    admissible = [c for c in cands if c.error_bound <= budget]
+    if not admissible:
+        return identity_codec()
+    return min(admissible, key=lambda c: (c.ratio, c.error_bound))
 
 
 @dataclass

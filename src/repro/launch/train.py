@@ -16,6 +16,16 @@ reshard_tree -> resume`` (dist/elastic.rescale_cycle) — so a rescale
 event goes through the same machinery as a failure recovery.
 ``--elastic-demand`` scales the offered rate relative to measured
 per-worker throughput (a synthetic load curve for demos/tests).
+
+Without ``--elastic-demand`` the offered load is derived from the
+stream feeder's queue depth: batches are pulled through a
+:class:`~repro.streams.feeder.StreamFeeder`, and a prefetch queue that
+stays FULL for ``patience`` consecutive steps means the source outpaces
+the pool, so controller utilization crosses the grow threshold.
+(Previously measured-rate mode set offered = achieved x workers —
+utilization exactly 1.0 forever, a silent no-op.) The backpressure
+signal only grows the pool, toward the source's real rate or
+``--max-workers``; shrinking needs the explicit demand curve.
 """
 
 from __future__ import annotations
@@ -121,9 +131,20 @@ def main():
         patience=2, cooldown=2) if args.elastic else None)
     workers = args.data_mesh
 
+    # measured-rate elastic mode: pull batches through the stream feeder
+    # so its queue depth gives a real offered-load signal (a backlog
+    # means the source outpaces the pool -> utilization > 1 -> grow)
+    feeder = None
+    if controller is not None and args.elastic_demand <= 0:
+        from repro.streams.feeder import StreamFeeder
+        feeder = StreamFeeder(lambda shard, idx, n: gen.batch(idx, n),
+                              n_shards=1, batch_per_shard=args.batch,
+                              deadline_s=30.0, prefetch=4, start_idx=start)
+        feeder.start()
+
     def make_batch(i):
-        batch = {"tokens": jnp.asarray(
-            gen.batch(i, args.batch).data["tokens"])}
+        src = feeder.next() if feeder is not None else gen.batch(i, args.batch)
+        batch = {"tokens": jnp.asarray(src.data["tokens"])}
         if cfg.family == "vlm":
             batch["patches"] = jnp.zeros(
                 (args.batch, cfg.frontend_len, cfg.frontend_dim),
@@ -158,9 +179,20 @@ def main():
                     jax.block_until_ready(metrics["loss"])
                     dt_step = max(time.perf_counter() - t_step, 1e-9)
                     achieved = args.batch * args.seq / dt_step / workers
-                    offered = (args.elastic_demand * achieved
-                               if args.elastic_demand > 0
-                               else achieved * workers)
+                    if args.elastic_demand > 0:
+                        offered = args.elastic_demand * achieved
+                    elif feeder is not None:
+                        # binary backpressure: a SUSTAINED-full prefetch
+                        # queue (for `patience` consecutive steps) means
+                        # the source outpaces the pool -> grow. This
+                        # signal only ever grows (util is 1.0 when the
+                        # queue has slack, never under the shrink
+                        # threshold); shrinking needs a demand curve
+                        # (--elastic-demand).
+                        full = feeder.backlog >= feeder.prefetch
+                        offered = achieved * workers * (2.0 if full else 1.0)
+                    else:
+                        offered = achieved * workers
                     plan = controller.observe(i, offered, achieved)
                 i += 1
                 if plan is not None and plan.changed:
@@ -182,6 +214,8 @@ def main():
             print(f"elastic {plan.action} -> {workers} workers at step "
                   f"{int(step)} ({plan.reason}); resumed from checkpoint "
                   f"cycle on a {tuple(mesh.devices.shape)} mesh")
+    if feeder is not None:
+        feeder.stop()
     saver.wait()
     dt = time.perf_counter() - t0
     toks = (args.steps - start) * args.batch * args.seq

@@ -36,17 +36,26 @@ class StreamFeeder:
     def __init__(self, make_batch: Callable[[int, int, int], StreamBatch],
                  n_shards: int = 2, batch_per_shard: int = 64,
                  deadline_s: float = 1.0, prefetch: int = 2,
-                 inject_straggle: Optional[Callable[[int, int], float]] = None):
+                 inject_straggle: Optional[Callable[[int, int], float]] = None,
+                 start_idx: int = 0):
         self.make_batch = make_batch
         self.n_shards = n_shards
         self.batch_per_shard = batch_per_shard
         self.deadline_s = deadline_s
+        self.prefetch = prefetch
         self.inject_straggle = inject_straggle     # (shard, idx) -> sleep s
         self.stats = FeederStats()
         self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
-        self._idx = 0
+        self._idx = start_idx        # first batch index (resume support)
         self._thread: Optional[threading.Thread] = None
+
+    @property
+    def backlog(self) -> int:
+        """Prefetched batches waiting to be consumed. A persistently full
+        queue means the producers outpace the consumer — the offered-load
+        signal elastic scaling uses when no demand curve is given."""
+        return self._q.qsize()
 
     # -- worker ------------------------------------------------------------
     def _produce_one(self, idx: int) -> StreamBatch:

@@ -21,26 +21,61 @@ class WindowJoin:
     """Join two streams on event time: for each left event, attach the
     nearest right event within `tolerance` seconds (as-of join).
 
-    The ring buffer is a pair of numpy arrays: eviction is a tail slice
-    (amortized O(1) per event, versus the O(n^2) ``list.pop(0)`` loop this
-    replaced) and the as-of match is one vectorized ``np.searchsorted``
-    over the whole left batch instead of a Python double loop.
+    The ring is a TRUE circular buffer: a pair of preallocated numpy
+    arrays (capacity ``2 * max_buffer``) with head/tail indices. A push
+    writes in place at the tail and eviction just advances the head —
+    amortized O(1) per event (the buffer compacts to the front at most
+    once per ``max_buffer`` pushed events, instead of reallocating the
+    whole ring on *every* push as the concatenate version did). The live
+    window ``buf[head:tail]`` stays contiguous and time-sorted, so the
+    as-of match remains one vectorized ``np.searchsorted`` over the whole
+    left batch.
     """
     tolerance: float = 1.0
     max_buffer: int = 100_000
-    _rt: np.ndarray = field(
-        default_factory=lambda: np.empty(0, np.float64))
-    _rv: Optional[np.ndarray] = None
+    _buf_t: Optional[np.ndarray] = field(default=None, repr=False)
+    _buf_v: Optional[np.ndarray] = field(default=None, repr=False)
+    _head: int = 0
+    _tail: int = 0
+
+    @property
+    def _rt(self) -> np.ndarray:
+        """The live (time-sorted, contiguous) timestamp window."""
+        if self._buf_t is None:
+            return np.empty(0, np.float64)
+        return self._buf_t[self._head:self._tail]
+
+    @property
+    def _rv(self) -> Optional[np.ndarray]:
+        if self._buf_v is None:
+            return None
+        return self._buf_v[self._head:self._tail]
 
     def push_right(self, batch: StreamBatch, key: str = "x"):
         ts = np.asarray(batch.ts, np.float64)
         vals = np.asarray(batch.data[key])
-        self._rt = np.concatenate([self._rt, ts])
-        self._rv = (vals.copy() if self._rv is None
-                    else np.concatenate([self._rv, vals]))
-        if len(self._rt) > self.max_buffer:
-            self._rt = self._rt[-self.max_buffer:]
-            self._rv = self._rv[-self.max_buffer:]
+        if len(ts) > self.max_buffer:       # oversized push: newest survive
+            ts, vals = ts[-self.max_buffer:], vals[-self.max_buffer:]
+        n = len(ts)
+        if self._buf_t is None:             # value width known on first push
+            cap = max(2 * self.max_buffer, n)
+            self._buf_t = np.empty(cap, np.float64)
+            self._buf_v = np.empty((cap,) + vals.shape[1:], vals.dtype)
+        cap = len(self._buf_t)
+        want = np.promote_types(self._buf_v.dtype, vals.dtype)
+        if want != self._buf_v.dtype:       # dtype widened mid-stream:
+            self._buf_v = self._buf_v.astype(want)   # promote (rare; the
+            # old concatenate path upcast the same way)
+        if self._tail + n > cap:            # wrap: compact live window to 0
+            live = self._tail - self._head
+            self._buf_t[:live] = self._buf_t[self._head:self._tail]
+            self._buf_v[:live] = self._buf_v[self._head:self._tail]
+            self._head, self._tail = 0, live
+        self._buf_t[self._tail:self._tail + n] = ts
+        self._buf_v[self._tail:self._tail + n] = vals
+        self._tail += n
+        if self._tail - self._head > self.max_buffer:   # evict: O(1)
+            self._head = self._tail - self.max_buffer
 
     def join_left(self, batch: StreamBatch, out_key: str = "joined"
                   ) -> Tuple[StreamBatch, np.ndarray]:

@@ -243,6 +243,45 @@ def test_frontier_search_matches_exhaustive_oracle_on_random_dags(case):
         f"oracle_assign={oracle.assignment}")
 
 
+def _multipool_spec(codec: str):
+    from repro.core.costmodel import ClusterSpec, Link, Resource
+    edge_b = Resource("edge_b", "edge", chips=1, flops=1e12, mem_bw=40e9,
+                      mem_cap=2e9, net_bw=0.5e9, net_latency=35e-3,
+                      energy_w=10.0)
+    cloud_b = Resource("cloud_b", "cloud", chips=64, net_latency=0.5e-3,
+                       energy_w=220.0)
+    return ClusterSpec(
+        pools=[EDGE_NODE, edge_b, CLOUD_POD, cloud_b],
+        links=[Link("edge", "cloud", bw=1e9, latency=20e-3, codec=codec),
+               Link("edge_b", "cloud_b", bw=0.5e9, latency=40e-3,
+                    codec=codec),
+               Link("edge", "edge_b", bw=2e9, latency=5e-3)])
+
+
+@settings(max_examples=40, deadline=None, database=None)
+@given(case=_random_dag(),
+       codec=st.sampled_from(["identity", "int8_ef", "topk_int8_ef"]))
+def test_multipool_frontier_search_matches_oracle_on_random_dags(case, codec):
+    """The multi-pool generalization of the invariant above: over a
+    2-edge-pool/2-cloud-pod ClusterSpec with codec-carrying links, the
+    frontier search (frontiers x within-kind pool assignments) must match
+    the exhaustive every-op-to-every-pool oracle — cloud->edge backhaul
+    stays infeasible, so the edge-resident set of any feasible assignment
+    is downward-closed and the search covers it."""
+    graph, rate = case
+    obj = Objective()
+    spec = _multipool_spec(codec)
+    best, frontier = place_frontier(graph, spec, rate, obj)
+    oracle = place_graph_exhaustive(graph, spec, rate, obj)
+    assert obj.score(best) <= obj.score(oracle) * 1.0001, (
+        f"multi-pool frontier search lost to the oracle: "
+        f"frontier={sorted(frontier)} score={obj.score(best)} "
+        f"oracle={obj.score(oracle)} oracle_assign={oracle.assignment}")
+    edge_pools = {r.name for r in spec.edge_pools}
+    assert frontier == frozenset(
+        n for n, r in best.assignment.items() if r in edge_pools)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(0, 100))
 def test_moments_min_max_invariants(seed):

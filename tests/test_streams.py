@@ -187,6 +187,62 @@ def test_window_join_matches_within_tolerance():
     assert joined.data["joined"][1, 0] == 5.0
 
 
+def test_window_join_circular_buffer_reuses_storage():
+    """Regression: push_right must write into the preallocated ring in
+    place (head/tail indices, amortized O(1) eviction) instead of
+    reallocating the whole buffer per push."""
+    j = WindowJoin(tolerance=0.5, max_buffer=100)
+    mk = lambda lo: StreamBatch(
+        data={"x": np.full((40, 2), float(lo), np.float32)},
+        ts=np.arange(lo, lo + 40, dtype=np.float64))
+    j.push_right(mk(0))
+    buf_t, buf_v = j._buf_t, j._buf_v
+    assert len(buf_t) >= 2 * j.max_buffer     # preallocated capacity
+    for lo in range(40, 40 * 5, 40):
+        j.push_right(mk(lo))
+        assert j._buf_t is buf_t and j._buf_v is buf_v, \
+            "push reallocated the ring buffer"
+    # eviction keeps only the newest max_buffer rows, oldest first
+    assert len(j._rt) == 100
+    np.testing.assert_array_equal(j._rt, np.arange(100, 200, dtype=np.float64))
+    # wrap-around compaction keeps join results identical
+    for lo in range(200, 1200, 40):
+        j.push_right(mk(lo))
+    assert j._buf_t is buf_t, "compaction must reuse the same storage"
+    left = StreamBatch(data={"x": np.zeros((3, 1), np.float32)},
+                       ts=np.asarray([1100.2, 1150.0, 10.0]))
+    joined, matched = j.join_left(left)
+    assert matched.tolist() == [True, True, False]
+    assert joined.data["joined"][0, 0] == 1080.0   # batch holding ts=1100
+    assert joined.data["joined"][1, 0] == 1120.0
+
+
+def test_window_join_promotes_value_dtype_mid_stream():
+    """A wider dtype arriving after the ring is allocated must widen the
+    buffer (as the old concatenate path did), not silently truncate."""
+    j = WindowJoin(tolerance=0.5, max_buffer=16)
+    j.push_right(StreamBatch(
+        data={"x": np.arange(4)[:, None]},          # int64 values
+        ts=np.arange(4, dtype=np.float64)))
+    j.push_right(StreamBatch(
+        data={"x": np.full((4, 1), 7.5, np.float64)},
+        ts=np.arange(4, 8, dtype=np.float64)))
+    left = StreamBatch(data={"x": np.zeros((1, 1), np.float32)},
+                       ts=np.asarray([5.0]))
+    joined, matched = j.join_left(left)
+    assert matched.all()
+    assert joined.data["joined"][0, 0] == 7.5       # not truncated to 7
+
+
+def test_window_join_oversized_push_keeps_newest():
+    j = WindowJoin(tolerance=0.5, max_buffer=10)
+    j.push_right(StreamBatch(
+        data={"x": np.arange(25, dtype=np.float32)[:, None]},
+        ts=np.arange(25, dtype=np.float64)))
+    assert len(j._rt) == 10
+    np.testing.assert_array_equal(j._rt, np.arange(15, 25, dtype=np.float64))
+
+
 def test_delayed_label_aligner():
     al = DelayedLabelAligner()
     al.push_features(np.arange(5), np.arange(5, dtype=np.float64),

@@ -138,6 +138,28 @@ def test_elastic_train_rescales_through_checkpoint_cycle(tmp_path):
     assert ckpt.latest_step(tmp_path) is not None
 
 
+def test_elastic_without_demand_grows_on_queue_backlog(tmp_path):
+    """`--elastic` WITHOUT `--elastic-demand` used to be a silent no-op
+    (offered = achieved x workers -> utilization exactly 1.0, never
+    crossing a threshold). Offered load now derives from the stream
+    feeder's queue depth: the generator outpaces the smoke-config train
+    step on CPU, the backlog builds, and the controller must emit a grow
+    plan driven through the checkpoint rescale cycle."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen2-1.5b",
+         "--smoke", "--steps", "8", "--batch", "2", "--seq", "16",
+         "--data-mesh", "1", "--elastic", "--max-workers", "2",
+         "--ckpt-every", "50", "--ckpt-dir", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "elastic grow -> 2 workers" in out.stdout, out.stdout
+    assert "resumed from checkpoint cycle" in out.stdout
+    from repro.dist import checkpoint as ckpt
+    assert ckpt.latest_step(tmp_path) is not None
+
+
 def test_dryrun_single_cell_small_mesh():
     """The dry-run machinery on a small in-test mesh: lower+compile a
     reduced arch over (2,4) and extract scan-aware roofline terms."""
