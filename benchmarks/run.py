@@ -187,6 +187,51 @@ def bench_dag_place_multipool(rows, quick):
                  f"matches_oracle={agree}"))
 
 
+def bench_adaptive_codec_replan(rows, quick):
+    """Rate-adaptive codec control: one replan over the enlarged
+    (frontier x pool x codec) search — plans/sec so CI catches a
+    search-space blowup — plus the controller-level ramp decision."""
+    from repro.core import costmodel as cm
+    from repro.core.offload import OffloadController
+    from repro.core.pipeline import fanout_stream_graph
+    from repro.core.placement import Objective, place_frontier
+    from repro.core.sla import SLA, codec_candidates
+    edge_b = cm.Resource("edge_b", "edge", chips=1, flops=1e12, mem_bw=40e9,
+                         mem_cap=2e9, net_bw=0.5e9, net_latency=35e-3,
+                         energy_w=10.0)
+    cloud_b = cm.Resource("cloud_b", "cloud", chips=64, net_latency=0.5e-3,
+                          energy_w=220.0)
+    spec = cm.ClusterSpec(pools=[cm.EDGE_NODE, edge_b, cm.CLOUD_POD, cloud_b])
+    g = fanout_stream_graph(dim=16)
+    sla = SLA(max_latency_s=1e3, error_budget=11.0)
+    codecs = [c.name for c in codec_candidates(sla)]
+    obj = Objective()
+    n_frontiers = sum(1 for _ in g.frontiers())
+    iters = 2 if quick else 5
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        plan, frontier = place_frontier(g, spec, 5e6, obj, codecs=codecs)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    # the searched space: frontiers x within-kind pool products x codecs
+    n_plans = sum(2 ** len(f) * 2 ** (len(g.names) - len(f))
+                  for f in g.frontiers()) * len(codecs)
+    rows.append(("adaptive_codec_replan", us,
+                 f"{n_frontiers} frontiers x {len(codecs)} codecs = "
+                 f"{n_plans} plans, {n_plans / us * 1e6:.0f} plans/s, "
+                 f"codec={plan.uplink_codec}"))
+    # one full escalate/de-escalate cycle through the controller
+    ctl = OffloadController(g.costs(), spec, graph=g, codec="topk_int8_ef",
+                            sla_spec=sla, cooldown=1, codec_cooldown=1)
+    ctl.initial_plan(5e6)
+    t0 = time.perf_counter()
+    for step, rate in enumerate([1e3, 5e6] * 5):
+        ctl.observe(step, rate)
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    codecs_seen = sorted({d.codec for d in ctl.history})
+    rows.append(("adaptive_codec_observe", us,
+                 f"codecs={codecs_seen} migrations={ctl.migrations()}"))
+
+
 def bench_uplink_codec(rows, quick):
     """Uplink codec round-trip throughput + measured accumulated error
     vs the admitted bound, per codec."""
@@ -337,7 +382,8 @@ def bench_roofline_summary(rows, quick):
 ALL_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                bench_s3_offload, bench_pipeline_partition,
                bench_dag_placement, bench_dag_place_multipool,
-               bench_uplink_codec, bench_fusion_join,
+               bench_adaptive_codec_replan, bench_uplink_codec,
+               bench_fusion_join,
                bench_s4_feature_matrix, bench_generators, bench_sketches,
                bench_train_micro, bench_serve_micro, bench_roofline_summary]
 
@@ -347,7 +393,8 @@ ALL_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
 SMOKE_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                  bench_s3_offload, bench_pipeline_partition,
                  bench_dag_placement, bench_dag_place_multipool,
-                 bench_uplink_codec, bench_fusion_join,
+                 bench_adaptive_codec_replan, bench_uplink_codec,
+                 bench_fusion_join,
                  bench_s4_feature_matrix, bench_generators, bench_sketches]
 
 

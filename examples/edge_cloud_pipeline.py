@@ -14,6 +14,12 @@ collapsed by the ``edge_cloud_pools`` shim to the first pool of each
 kind — still works everywhere but is DEPRECATED: it ignores extra pools
 and their links. Prefer building a ``ClusterSpec``.
 
+The final section demonstrates **rate-adaptive codec control**: the
+offload controller re-runs codec admission on every replan from
+windowed SLA telemetry, escalating the uplink codec when the link
+saturates and de-escalating toward lossless on recovery — printing the
+codec trajectory of a saturating rate ramp.
+
   PYTHONPATH=src python examples/edge_cloud_pipeline.py
 """
 
@@ -99,6 +105,40 @@ def main():
             print(f"step {step:3d}: rate={rate:9.0f} -> {d.reason:9s} "
                   f"edge={sorted(d.frontier) or ['-']} codec={d.codec}")
     print(f"total migrations: {ctl.migrations()}")
+
+    # -- rate-adaptive codec control: re-admission at replan time ---------
+    # The uplink codec is a runtime control dimension: on every replan
+    # the controller re-runs codec admission against the windowed SLA
+    # report + the modeled saturation of the incumbent plan, escalating
+    # to cheaper wire when the uplink saturates and de-escalating toward
+    # lossless when the link has headroom (hysteresis band + cooldown
+    # stop codec flapping). Links here declare no codec, so the blanket
+    # candidate actually gets to move.
+    print("\n== rate-adaptive uplink codec under a saturating rate ramp ==")
+    pipe = pl.standard_stream_pipeline(dim=8, sample_rate=0.5)
+    adaptive_sla = SLA(max_latency_s=1e3, error_budget=11.0)
+    # a rate-aware initial pick: with no bandwidth pressure the most
+    # faithful admissible codec wins (lossless), unlike the static
+    # cheapest-wire admission above
+    start = pick_codec(adaptive_sla, report={"uplink_utilization": 0.0,
+                                             "violation_rate": 0.0})
+    actl = OffloadController(
+        pipe.costs(), cm.ClusterSpec.edge_cloud(), graph=pipe,
+        codec=start.name, sla_spec=adaptive_sla,
+        cooldown=2, codec_cooldown=4)
+    ramp = [1e4] * 6 + [8e7] * 6 + [1e4] * 6       # saturate, then recover
+    actl.initial_plan(ramp[0])
+    for step, rate in enumerate(ramp):
+        d = actl.observe(step, rate)
+        if d.reason != "hold":
+            print(f"step {step:3d}: rate={rate:9.0f} -> {d.reason:9s} "
+                  f"codec={d.codec:13s} "
+                  f"uplink={d.plan.uplink_utilization:6.3f} "
+                  f"edge={sorted(d.frontier) or ['-']}")
+    traj = [d.codec for d in actl.history]
+    compact = [traj[0]] + [b for a, b in zip(traj, traj[1:]) if a != b]
+    print(f"codec trajectory: {' -> '.join(compact)}")
+    assert len(compact) >= 3, "ramp should escalate and de-escalate"
 
     print("\n== straggler-tolerant feeding ==")
     def make(shard, idx, n):

@@ -233,6 +233,10 @@ class PipelinePlan:
     energy_w: float = 0.0
     feasible: bool = True
     notes: List[str] = field(default_factory=list)
+    # the blanket uplink codec this plan was priced under when the codec
+    # is part of the plan search (placement.frontier_plans codecs=...);
+    # None -> whatever the ClusterSpec's links declare
+    uplink_codec: Optional[str] = None
 
 
 def evaluate_plan(ops: List[OperatorCost], assign: Dict[str, str],

@@ -17,17 +17,31 @@ assignment (which pool each op runs on, not merely which side of the
 cut) together with the uplink codec — so a multi-pool rebalance that
 keeps the frontier set but moves ops between pods still counts as a
 migration.
+
+**Rate-adaptive codec control** (``sla_spec`` + ``codec_candidates``):
+the uplink codec is a runtime control dimension, not a construction-time
+constant. On every replan event (``rate_up``/``rate_down``/``sla``) the
+controller re-runs codec admission against the *windowed* SLA report
+(:func:`repro.core.sla.codec_candidates`), extended with the modeled
+bottleneck-link utilization of the *current* plan at the new rate: when
+the uplink saturates, every budget-admissible codec enters the plan
+search and the winning (frontier, pool-assignment, codec) triple
+escalates toward cheaper wire; when violations come from latency or the
+link has headroom, admission de-escalates toward lossless. Codec changes
+carry their own hysteresis (``codec_cooldown`` decisions between swaps,
+plus the saturated/relaxed dead band) so codec flapping cannot thrash.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, List, Optional, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.core.costmodel import (ClusterSpec, OperatorCost, PipelinePlan,
                                   ResourcesLike)
 from repro.core.placement import Objective, place, place_frontier
-from repro.core.sla import SLATracker
+from repro.core.sla import SLA, SLATracker
+from repro.core.sla import codec_candidates as sla_codec_candidates
 
 
 @dataclass
@@ -51,35 +65,100 @@ class OffloadController:
     graph: Optional[object] = None
     # uplink codec the plan executes with (part of plan identity)
     codec: str = "identity"
+    # rate-adaptive codec control: the SLA whose error budget gates
+    # admission, and the candidate codec names re-admission may pick
+    # from. sla_spec=None (or a single candidate) pins the codec — the
+    # historical fixed-codec behavior.
+    sla_spec: Optional[SLA] = None
+    codec_candidates: Optional[List[str]] = None
     headroom: float = 1.3      # replan when rate moves x1.3 outside band
     cooldown: int = 5          # min decisions between migrations
+    codec_cooldown: int = 10   # min decisions between codec swaps
     planned_rate: float = 0.0
     cut: int = 0
     frontier: FrozenSet[str] = frozenset()
     assignment: Dict[str, str] = field(default_factory=dict)
     _last_change: int = -10**9
+    _last_codec_change: int = -10**9
     history: List[OffloadDecision] = field(default_factory=list)
 
     def __post_init__(self):
         self.resources = ClusterSpec.of(self.resources)
         self._edge_pools = {r.name for r in self.resources.edge_pools}
+        if self.codec_candidates is None:
+            if self.sla_spec is not None:
+                self.codec_candidates = [
+                    c.name for c in sla_codec_candidates(self.sla_spec)]
+            else:
+                self.codec_candidates = [self.codec]
+        if self.codec not in self.codec_candidates:
+            self.codec_candidates = [self.codec, *self.codec_candidates]
 
-    def _identity(self, assignment: Dict[str, str]
+    @property
+    def _adaptive(self) -> bool:
+        return self.sla_spec is not None and len(self.codec_candidates) > 1
+
+    def _identity(self, assignment: Dict[str, str], codec: str
                   ) -> Tuple[Tuple[Tuple[str, str], ...], str]:
         """Plan identity: pool assignment + codec (hashable)."""
-        return tuple(sorted(assignment.items())), self.codec
+        return tuple(sorted(assignment.items())), codec
 
     def _frontier_of(self, assignment: Dict[str, str]) -> FrozenSet[str]:
         return frozenset(n for n, r in assignment.items()
                          if r in self._edge_pools)
 
-    def _plan(self, rate: float):
+    def _plan(self, rate: float, codecs: Optional[Sequence[str]] = None):
+        """Best plan at ``rate`` over the codec candidate names (default:
+        the codec currently in force). ``plan.uplink_codec`` records the
+        winning codec."""
+        codecs = list(codecs) if codecs else [self.codec]
         if self.graph is not None:
-            plan, _ = place_frontier(self.graph, self.resources,
-                                     rate, self.objective)
+            plan, _ = place_frontier(self.graph, self.resources, rate,
+                                     self.objective, codecs=codecs)
         else:
-            plan, _ = place(self.ops, self.resources, rate, self.objective)
+            plan = None
+            best_score = float("inf")
+            for cname in codecs:
+                spec = self.resources.with_uplink_codec(cname)
+                cand, _ = place(self.ops, spec, rate, self.objective)
+                cand.uplink_codec = cname
+                s = self.objective.score(cand)
+                if plan is None or s < best_score:
+                    plan, best_score = cand, s
         return plan, self._frontier_of(plan.assignment)
+
+    def _replan_codecs(self, rate: float, sla: Optional[SLATracker]):
+        """A replan with codec re-admission. The saturation signal is
+        the bottleneck-link utilization of the best plan under the MOST
+        FAITHFUL admissible codec — "what would the lossless wire see" —
+        so a compressed incumbent cannot mask a saturated link into a
+        bogus de-escalation (an infeasible faithful plan counts as fully
+        saturated; a purely compute-infeasible plan escalates too, but
+        the search then keeps the most faithful candidate because
+        compression does not improve its score)."""
+        from repro.core.codecs import get_codec
+        cands = [get_codec(n) for n in self.codec_candidates]
+        faithful = min(cands, key=lambda c: (c.error_bound, c.ratio)).name
+        plan_f, frontier_f = self._plan(rate, [faithful])
+        report = dict(sla.report()) if sla is not None else {}
+        report.setdefault("violation_rate", 0.0)
+        report["codec"] = self.codec
+        report["uplink_utilization"] = (
+            plan_f.uplink_utilization if plan_f.feasible else float("inf"))
+        names = [c.name for c in sla_codec_candidates(
+            self.sla_spec, report=report, candidates=cands)]
+        if names == [faithful]:
+            return plan_f, frontier_f
+        # the faithful probe is already the best plan for its codec:
+        # search only the remaining candidates and keep the probe when
+        # it scores no worse (ties resolve most-faithful-first, matching
+        # the combined search) — halves the escalation-path search cost
+        rest = [n for n in names if n != faithful]
+        plan_r, frontier_r = self._plan(rate, rest)
+        if len(rest) < len(names) and \
+                self.objective.score(plan_f) <= self.objective.score(plan_r):
+            return plan_f, frontier_f
+        return plan_r, frontier_r
 
     def _decide(self, step: int, rate: float, reason: str,
                 plan: PipelinePlan, frontier: FrozenSet[str]
@@ -87,18 +166,25 @@ class OffloadController:
         return OffloadDecision(step, rate, len(frontier), reason, plan,
                                frontier, dict(plan.assignment), self.codec)
 
-    def initial_plan(self, rate: float) -> OffloadDecision:
+    def initial_plan(self, rate: float, step: int = 0) -> OffloadDecision:
         plan, frontier = self._plan(rate)
+        # the initial admission starts the codec-hysteresis clock: the
+        # first swap also has to wait out codec_cooldown
+        self._last_codec_change = step
         self.planned_rate, self.frontier = rate, frontier
         self.assignment = dict(plan.assignment)
         self.cut = len(frontier)
-        d = self._decide(0, rate, "initial", plan, frontier)
+        d = self._decide(step, rate, "initial", plan, frontier)
         self.history.append(d)
         return d
 
     def observe(self, step: int, rate: float,
                 sla: Optional[SLATracker] = None) -> OffloadDecision:
         """Called periodically with the measured ingest rate."""
+        if not self.history:
+            # observe() before initial_plan() used to IndexError on
+            # history[-1]; take the initial plan lazily instead
+            return self.initial_plan(rate, step=step)
         out_of_band = (rate > self.planned_rate * self.headroom
                        or rate < self.planned_rate / self.headroom)
         sla_bad = sla is not None and not sla.ok()
@@ -107,10 +193,24 @@ class OffloadController:
             return OffloadDecision(step, rate, self.cut, "hold",
                                    self.history[-1].plan, self.frontier,
                                    dict(self.assignment), self.codec)
-        plan, frontier = self._plan(rate)
+        # replan event: re-run codec admission against the windowed SLA
+        # report; when admission widens or moves the candidate set, the
+        # (frontier x pool x codec) search decides. Codec hysteresis:
+        # within codec_cooldown of the last swap only the incumbent
+        # codec is searched.
+        old_identity = self._identity(self.assignment, self.codec)
+        if self._adaptive and \
+                step - self._last_codec_change >= self.codec_cooldown:
+            plan, frontier = self._replan_codecs(rate, sla)
+        else:
+            plan, frontier = self._plan(rate)
+        new_codec = plan.uplink_codec or self.codec
+        if new_codec != self.codec:
+            self.codec = new_codec
+            self._last_codec_change = step
         reason = "sla" if sla_bad else (
             "rate_up" if rate > self.planned_rate else "rate_down")
-        if self._identity(plan.assignment) != self._identity(self.assignment):
+        if self._identity(plan.assignment, self.codec) != old_identity:
             self._last_change = step
         self.planned_rate, self.frontier = rate, frontier
         self.assignment = dict(plan.assignment)

@@ -17,7 +17,13 @@ and an SLA. The orchestrator:
      rest as the cloud segment (core/pipeline), applying the chosen
      codec's wire round-trip to batches crossing the uplink,
   3. monitors rate + SLA, *re-plans* via the offload controller, and
-     re-partitions the graph when the assignment migrates,
+     re-partitions the graph when the assignment migrates — including
+     **codec migrations**: the controller re-runs codec admission
+     against the windowed SLA report on every replan, and when the
+     winning plan carries a different uplink codec the orchestrator
+     swaps the wire round-trip fn and flushes the error-feedback
+     residuals (a stale carry from the old codec's quantization
+     geometry must not leak into the new one),
   4. reacts to drift alarms through each op's declared drift response,
   5. drives elastic grow/shrink plans through the real state-carrying
      ``elastic.rescale_cycle`` (checkpoint.save -> rebuild_mesh ->
@@ -44,7 +50,7 @@ from repro.core.costmodel import CLOUD_POD, EDGE_NODE, ClusterSpec, Resource
 from repro.core.offload import OffloadController
 from repro.core.pipeline import OpGraph, Pipeline, standard_stream_pipeline
 from repro.core.placement import Objective
-from repro.core.sla import SLA, SLATracker, pick_codec
+from repro.core.sla import SLA, SLATracker, codec_candidates, pick_codec
 from repro.dist import elastic
 
 
@@ -54,6 +60,10 @@ class StreamJob:
     dim: int = 16
     n_classes: int = 2
     sla: SLA = field(default_factory=SLA)
+    # SLA telemetry window: every tracker statistic (violation rate,
+    # p99) covers the last `sla_window` batches, so violations age out
+    # and replanning reacts to current state, not lifetime history
+    sla_window: int = 100
     sample_rate: float = 0.5
     drift_detector: str = "ddm"          # ddm|eddm|ph|adwin
     # full cluster topology (any number of edge pools / cloud pods with
@@ -85,9 +95,19 @@ class JobMetrics:
     decisions: List[str] = field(default_factory=list)
     cuts: List[int] = field(default_factory=list)        # |frontier| per batch
     # assignment record per batch: the frozenset of edge-resident op names
+    # (the frontier VIEW — kept for back-compat; migrations count on the
+    # full plan identity below)
     assignments: List[FrozenSet[str]] = field(default_factory=list)
+    # full executed plan identity per batch: (sorted (op, pool) pairs,
+    # uplink codec) — the identity contract of core/offload, so a
+    # multi-pool rebalance that keeps the frontier but moves ops between
+    # pods, or a codec-only migration, is still counted
+    plan_identities: List[tuple] = field(default_factory=list)
+    codecs: List[str] = field(default_factory=list)      # codec per batch
     outputs: List[dict] = field(default_factory=list)    # when recording
-    codec: str = "identity"                              # uplink codec used
+    # the initially admitted uplink codec (pick_codec at job start); the
+    # per-batch trajectory under rate-adaptive control is `codecs`
+    codec: str = "identity"
 
 
 class Orchestrator:
@@ -106,6 +126,10 @@ class Orchestrator:
         spec = (ClusterSpec.of(job.cluster) if job.cluster is not None
                 else ClusterSpec.edge_cloud(job.edge_resource,
                                             job.cloud_resource))
+        # the user-declared topology, BEFORE the blanket codec attach:
+        # rate-adaptive replans re-derive per-candidate specs from it
+        # (user-declared per-link codecs always win over the blanket)
+        self._base_cluster = spec
         self.codec = pick_codec(job.sla)
         self.cluster = spec.with_uplink_codec(self.codec.name)
         from repro.core.codecs import get_codec
@@ -128,11 +152,17 @@ class Orchestrator:
         self.is_graph = not isinstance(self.pipeline, Pipeline)
         # the cost model prices the SAME op list the executor runs
         self.ops = self.pipeline.costs()
+        # every budget-admissible codec is a replan-time candidate: the
+        # controller re-runs admission against windowed SLA telemetry on
+        # each replan event and may migrate the codec (a zero budget
+        # leaves exactly [identity] — the codec is then pinned)
+        self.codec_candidates = [c.name for c in codec_candidates(job.sla)]
         self.controller = OffloadController(
-            self.ops, self.cluster, job.objective,
+            self.ops, self._base_cluster, job.objective,
             graph=self.pipeline if self.is_graph else None,
-            codec=self.codec.name)
-        self.sla = SLATracker(job.sla)
+            codec=self.codec.name, sla_spec=job.sla,
+            codec_candidates=self.codec_candidates)
+        self.sla = SLATracker(job.sla, window=job.sla_window)
         # error-feedback residuals for the lossy uplink codec, keyed by
         # batch channel (carried across steps so accumulated error stays
         # within the codec's admitted bound)
@@ -172,6 +202,21 @@ class Orchestrator:
             return out
 
         return uplink
+
+    # -- codec migration: swap the wire round-trip at a replan boundary -----
+    def _swap_codec(self, name: str, step: int) -> None:
+        """Runtime codec migration: swap the wire round-trip fn and FLUSH
+        the error-feedback residuals — a stale carry is expressed in the
+        old codec's quantization geometry and would corrupt (leak stale
+        mass into) the first round-trips of the new codec. The next lossy
+        crossing reseeds zero residuals via ``init_residual``."""
+        from repro.core.codecs import get_codec
+        old = self.codec.name
+        self.codec = get_codec(name)
+        self._uplink_residuals.clear()
+        self.cluster = self._base_cluster.with_uplink_codec(name)
+        self._uplink = self._uplink_fn()
+        self.metrics.decisions.append(f"{step}:codec {old}->{name}")
 
     # -- drift response: each op declares its own -------------------------
     def _apply_drift_response(self):
@@ -222,10 +267,20 @@ class Orchestrator:
             self.frontier = dec.frontier
         pinned = fixed_cut is not None or fixed_frontier is not None
         self.cut = len(self.frontier)
+        # the executed plan identity (assignment + codec) in force; a
+        # pinned reference run keeps it constant -> 0 executed migrations
+        if pinned:
+            e = self.cluster.edge_pools[0].name
+            c = self.cluster.cloud_pools[0].name
+            self._exec_assignment = {
+                n: (e if n in self.frontier else c)
+                for n in self.pipeline.names}
+        else:
+            self._exec_assignment = dict(dec.assignment)
         self.metrics.codec = self.codec.name
         self.metrics.decisions.append(
             f"0:init cut={self.cut} codec={self.codec.name}")
-        uplink = self._uplink_fn()
+        self._uplink = self._uplink_fn()
         for step, batch in enumerate(batches):
             t0 = time.perf_counter()
             bd = {k: jnp.asarray(v) for k, v in batch.data.items()}
@@ -236,13 +291,17 @@ class Orchestrator:
             if self.is_graph:
                 self.states, out = self.pipeline.run(self.states, bd,
                                                      self.frontier,
-                                                     uplink=uplink)
+                                                     uplink=self._uplink)
             else:
                 self.states, out = self.pipeline.run(self.states, bd,
                                                      self.cut,
-                                                     uplink=uplink)
+                                                     uplink=self._uplink)
             self.metrics.cuts.append(self.cut)
             self.metrics.assignments.append(self.frontier)
+            self.metrics.codecs.append(self.codec.name)
+            self.metrics.plan_identities.append(
+                (tuple(sorted(self._exec_assignment.items())),
+                 self.codec.name))
             if record_outputs:
                 self.metrics.outputs.append(
                     {k: np.asarray(v) for k, v in out.items() if k != "rng"})
@@ -257,14 +316,21 @@ class Orchestrator:
             if d.reason != "hold":
                 self.metrics.decisions.append(
                     f"{step}:{d.reason} cut={d.cut}")
-            if not pinned and d.frontier != self.frontier:
-                # migration: re-partition — the next pipeline.run re-fuses
-                # segments for the new cut (compile cache makes revisits free)
-                self.metrics.decisions.append(
-                    f"{step}:repartition {self.cut}->{d.cut} "
-                    f"edge={sorted(d.frontier)}")
-                self.frontier = d.frontier
-                self.cut = len(d.frontier)
+            if not pinned:
+                if d.codec != self.codec.name:
+                    # codec migration: new wire round-trip, flushed EF
+                    # residuals (frontier may or may not move with it)
+                    self._swap_codec(d.codec, step)
+                if d.frontier != self.frontier:
+                    # migration: re-partition — the next pipeline.run
+                    # re-fuses segments for the new cut (compile cache
+                    # makes revisits free)
+                    self.metrics.decisions.append(
+                        f"{step}:repartition {self.cut}->{d.cut} "
+                        f"edge={sorted(d.frontier)}")
+                    self.frontier = d.frontier
+                    self.cut = len(d.frontier)
+                self._exec_assignment = dict(d.assignment)
             # elastic cloud-pool sizing: grow/shrink the worker count when
             # the offered rate persistently over/under-runs the pool; a
             # changed plan is DRIVEN through the checkpoint rescale cycle
@@ -272,12 +338,14 @@ class Orchestrator:
             if plan.changed:
                 self._apply_rescale(step, plan)
             self.metrics.events += batch.n
-        # migrations = partition changes that actually EXECUTED (a pinned
-        # reference run reports 0 even when the controller's virtual plan
-        # moved)
+        # migrations = plan-identity changes that actually EXECUTED (the
+        # full (assignment, codec) identity per core/offload's contract:
+        # a pod rebalance that keeps the frontier, or a codec-only swap,
+        # still counts; a pinned reference run reports 0 even when the
+        # controller's virtual plan moved)
         self.metrics.migrations = sum(
-            1 for a, b in zip(self.metrics.assignments,
-                              self.metrics.assignments[1:])
+            1 for a, b in zip(self.metrics.plan_identities,
+                              self.metrics.plan_identities[1:])
             if a != b)
         self.metrics.rescales = self.elastic.rescales
         self.metrics.workers = self.elastic.workers

@@ -21,7 +21,8 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Dict, FrozenSet, Iterator, List, Optional, Tuple
+from typing import (Dict, FrozenSet, Iterator, List, Optional, Sequence,
+                    Tuple)
 
 from repro.core.costmodel import (ClusterSpec, OperatorCost, PipelinePlan,
                                   Resource, ResourcesLike,
@@ -147,8 +148,21 @@ def _frontier_assignments(names: List[str], frontier: FrozenSet[str],
             yield assign
 
 
+def _codec_specs(spec: ClusterSpec, codecs: Optional[Sequence[str]]
+                 ) -> List[Tuple[Optional[str], ClusterSpec]]:
+    """The (codec name, spec-with-that-uplink-codec) pairs a codec-aware
+    search prices. ``codecs=None`` -> the spec as declared (one entry,
+    codec ``None``). A user-declared per-link lossy codec is preserved
+    (``with_uplink_codec`` default), so the blanket candidate fills only
+    undeclared uplinks."""
+    if codecs is None:
+        return [(None, spec)]
+    return [(c, spec.with_uplink_codec(c)) for c in codecs]
+
+
 def frontier_plans(graph, resources: ResourcesLike, rate: float,
-                   objective: Optional[Objective] = None
+                   objective: Optional[Objective] = None,
+                   codecs: Optional[Sequence[str]] = None
                    ) -> Iterator[Tuple[FrozenSet[str], PipelinePlan]]:
     """For every downward-closed frontier of ``graph``: the best plan
     (under ``objective``) over all within-kind pool assignments — the
@@ -156,7 +170,16 @@ def frontier_plans(graph, resources: ResourcesLike, rate: float,
     cloud pods. For a one-edge/one-cloud spec each frontier has exactly
     one assignment, so this degenerates to the classic two-pool frontier
     enumeration (and, for a linear :class:`~repro.core.pipeline.Pipeline`,
-    to :func:`prefix_cut_plans`)."""
+    to :func:`prefix_cut_plans`).
+
+    ``codecs`` makes the uplink codec a searched plan dimension: each
+    candidate name is attached to the spec's uplinks
+    (:meth:`~repro.core.costmodel.ClusterSpec.with_uplink_codec`) and
+    the winning plan per frontier is the best (pool-assignment, codec)
+    pair, with ``plan.uplink_codec`` recording the codec it was priced
+    under. Pass candidates most-faithful-first so score ties (e.g. a
+    frontier with no uplink crossing) resolve toward lossless.
+    """
     spec = ClusterSpec.of(resources)
     objective = objective or Objective()
     edges, clouds = spec.edge_pools, spec.cloud_pools
@@ -168,29 +191,36 @@ def frontier_plans(graph, resources: ResourcesLike, rate: float,
     e_names = [r.name for r in edges]
     c_names = [r.name for r in clouds]
     names = graph.names
+    specs = _codec_specs(spec, codecs)
     for frontier in graph.frontiers():
         best, best_score = None, float("inf")
         for assign in _frontier_assignments(names, frontier,
                                             e_names, c_names):
-            plan = _graph_plan(graph, assign, spec, rate)
-            s = objective.score(plan)
-            if best is None or s < best_score:
-                best, best_score = plan, s
+            for cname, cspec in specs:
+                plan = _graph_plan(graph, assign, cspec, rate)
+                plan.uplink_codec = cname
+                s = objective.score(plan)
+                if best is None or s < best_score:
+                    best, best_score = plan, s
         yield frontier, best
 
 
 def place_frontier(graph, resources: ResourcesLike, rate: float,
-                   objective: Optional[Objective] = None
+                   objective: Optional[Objective] = None,
+                   codecs: Optional[Sequence[str]] = None
                    ) -> Tuple[PipelinePlan, FrozenSet[str]]:
     """Best frontier-cut placement of an operator DAG over a
     :class:`ClusterSpec` — multi-pool: each frontier side may split
     across the pools of its kind, priced per crossing link with
-    codec-compressed bytes. Returns ``(plan, frontier)`` where
-    ``frontier`` is the edge-resident op set (``plan.assignment`` holds
-    the per-op pool detail)."""
+    codec-compressed bytes. With ``codecs`` the winning plan is the best
+    (frontier, pool-assignment, codec) triple and ``plan.uplink_codec``
+    names the codec it was priced under. Returns ``(plan, frontier)``
+    where ``frontier`` is the edge-resident op set (``plan.assignment``
+    holds the per-op pool detail)."""
     objective = objective or Objective()
     best, best_f, best_score = None, frozenset(), float("inf")
-    for frontier, plan in frontier_plans(graph, resources, rate, objective):
+    for frontier, plan in frontier_plans(graph, resources, rate, objective,
+                                         codecs=codecs):
         s = objective.score(plan)
         if s < best_score or (s == best_score and best is not None
                               and len(frontier) < len(best_f)):
@@ -202,8 +232,14 @@ def place_frontier(graph, resources: ResourcesLike, rate: float,
         spec = ClusterSpec.of(resources)
         cloud = spec.cloud_pools[0]
         assign = {name: cloud.name for name in graph.names}
-        best = _graph_plan(graph, assign, spec, rate)
-        best_f = frozenset()
+        fb, fb_score = None, float("inf")
+        for cname, cspec in _codec_specs(spec, codecs):
+            plan = _graph_plan(graph, assign, cspec, rate)
+            plan.uplink_codec = cname
+            s = objective.score(plan)
+            if fb is None or s < fb_score:
+                fb, fb_score = plan, s
+        best, best_f = fb, frozenset()
     return best, best_f
 
 
