@@ -1,0 +1,155 @@
+"""Perf-trajectory gate: diff the newest BENCH_*.json against the prior
+one and fail on regressions.
+
+The committed ``benchmarks/BENCH_<pr>.json`` files are the repo's perf
+trajectory — one snapshot per PR, produced by
+``python -m benchmarks.run --smoke --out BENCH_<pr>.json``. This tool
+compares a fresh run against the last committed snapshot and exits
+nonzero when any gated row regressed past the threshold, so CI catches
+a perf cliff the way it catches a failing test.
+
+Gating policy (see benchmarks/README.md):
+
+  * a row regresses when ``new_median / base_median > threshold``
+    (default 1.25x);
+  * rows whose median is under ``--min-us`` in BOTH snapshots are
+    reported but never gate — they time scheduler noise, not work;
+  * ``--calibrate NAME`` divides every ratio by that row's own ratio,
+    normalizing out cross-machine speed differences (pick a row that is
+    pure compute and did not change);
+  * a baseline row missing from the new run fails (a silently dropped
+    benchmark is a regression of coverage), as does any ERROR row;
+  * rows new in this run are reported as additions and never gate.
+
+Run:
+  PYTHONPATH=src python -m benchmarks.run --smoke --out /tmp/BENCH_ci.json
+  python -m benchmarks.compare /tmp/BENCH_ci.json \
+      [--baseline benchmarks/BENCH_0006.json] [--threshold 1.25]
+      [--min-us 100] [--calibrate s2_logreg_update_1ev]
+
+Without ``--baseline`` the highest-numbered ``BENCH_*.json`` next to
+this file is used.
+"""
+
+import argparse
+import glob
+import json
+import os
+
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if "rows" not in doc or not isinstance(doc["rows"], list):
+        raise ValueError(f"{path}: not a bench snapshot (no 'rows' list)")
+    return doc
+
+
+def latest_baseline(exclude: str = None) -> str:
+    """Highest-numbered committed BENCH_*.json (the newest trajectory
+    point), optionally excluding the file under comparison."""
+    cands = sorted(glob.glob(os.path.join(BENCH_DIR, "BENCH_*.json")))
+    if exclude:
+        ex = os.path.abspath(exclude)
+        cands = [c for c in cands if os.path.abspath(c) != ex]
+    if not cands:
+        raise FileNotFoundError(
+            f"no committed BENCH_*.json under {BENCH_DIR} to compare against")
+    return cands[-1]
+
+
+def compare(new: dict, base: dict, *, threshold: float = 1.25,
+            min_us: float = 100.0, calibrate: str = None):
+    """Diff two snapshots. Returns ``(failures, lines)``: the list of
+    failure strings (empty = gate passes) and the full per-row report."""
+    new_rows = {r["name"]: r for r in new["rows"]}
+    base_rows = {r["name"]: r for r in base["rows"]}
+    failures, lines = [], []
+
+    cal = 1.0
+    if calibrate is not None:
+        nc, bc = new_rows.get(calibrate), base_rows.get(calibrate)
+        if nc is None or bc is None:
+            failures.append(f"calibration row {calibrate!r} missing "
+                            f"({'new' if nc is None else 'baseline'} snapshot)")
+        elif nc["median_us"] <= 0 or bc["median_us"] <= 0:
+            failures.append(f"calibration row {calibrate!r} has non-positive "
+                            "median")
+        else:
+            cal = nc["median_us"] / bc["median_us"]
+            lines.append(f"calibrate {calibrate}: machine factor {cal:.3f}x")
+
+    for name, br in base_rows.items():
+        nr = new_rows.get(name)
+        if nr is None:
+            failures.append(f"row {name!r} present in baseline but missing "
+                            "from the new run")
+            lines.append(f"MISSING  {name}")
+            continue
+        if str(nr["units"]).startswith("ERROR"):
+            failures.append(f"row {name!r} errored: {nr['units']}")
+            lines.append(f"ERROR    {name}  {nr['units']}")
+            continue
+        b_us, n_us = br["median_us"], nr["median_us"]
+        if b_us <= 0 or n_us <= 0:
+            lines.append(f"skip     {name}  non-positive median "
+                         f"({b_us:.2f} -> {n_us:.2f})")
+            continue
+        ratio = (n_us / b_us) / cal
+        tag = "ok"
+        if b_us < min_us and n_us < min_us * max(cal, 1.0):
+            tag = "noise"                      # under the floor: never gates
+        elif ratio > threshold:
+            tag = "REGRESS"
+            failures.append(f"row {name!r} regressed {ratio:.2f}x "
+                            f"({b_us:.1f}us -> {n_us:.1f}us, "
+                            f"threshold {threshold}x)")
+        lines.append(f"{tag:<8} {name}  {b_us:.1f}us -> {n_us:.1f}us "
+                     f"({ratio:.2f}x)")
+
+    for name in sorted(set(new_rows) - set(base_rows)):
+        lines.append(f"new      {name}  {new_rows[name]['median_us']:.1f}us")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="fresh BENCH_*.json to gate")
+    ap.add_argument("--baseline", default=None,
+                    help="trajectory point to diff against (default: the "
+                         "highest-numbered benchmarks/BENCH_*.json)")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="fail when new/base median exceeds this (1.25)")
+    ap.add_argument("--min-us", type=float, default=100.0,
+                    help="rows under this median in both snapshots never "
+                         "gate (scheduler noise floor, default 100us)")
+    ap.add_argument("--calibrate", default=None, metavar="NAME",
+                    help="normalize all ratios by this row's own ratio "
+                         "(cross-machine correction)")
+    args = ap.parse_args(argv)
+
+    base_path = args.baseline or latest_baseline(exclude=args.new)
+    new, base = load(args.new), load(base_path)
+    if new.get("backend") != base.get("backend"):
+        print(f"note: backend changed {base.get('backend')} -> "
+              f"{new.get('backend')}; timings are not comparable without "
+              "--calibrate")
+    failures, lines = compare(new, base, threshold=args.threshold,
+                              min_us=args.min_us, calibrate=args.calibrate)
+    print(f"baseline {base_path} (sha {base.get('git_sha')}) vs "
+          f"{args.new} (sha {new.get('git_sha')})")
+    for line in lines:
+        print(line)
+    if failures:
+        print(f"\nFAILED: {len(failures)} perf-trajectory violation(s)")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nOK: {len(base['rows'])} gated rows within {args.threshold}x")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,11 +2,17 @@
 quantitative tables, so Table 1 rows / success criteria S1-S4 are the
 benchmark targets; EXPERIMENTS.md maps each to its row here).
 
-Prints ``name,us_per_call,derived`` CSV. Run:
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+Prints ``name,us_per_call,derived`` CSV; ``--out PATH`` additionally
+writes the machine-readable trajectory snapshot ``benchmarks/compare.py``
+gates CI on (see ``benchmarks/README.md``). Run:
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--smoke]
+      [--only SUBSTR] [--out BENCH_<pr>.json]
 """
 
 import argparse
+import json
+import os
+import subprocess
 import time
 
 import numpy as np
@@ -14,15 +20,37 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+BENCH_SCHEMA = "s2ce-bench/1"
 
-def _timeit(fn, *args, warmup=2, iters=10):
+
+class BenchStat(float):
+    """Median µs-per-call that IS a float (every existing ``f"{us:.2f}"``
+    / arithmetic call site keeps working) but carries the full sample
+    stats the JSON trajectory persists: p90, sample count, payload bytes."""
+
+    def __new__(cls, median_us, p90_us=None, iters=1, nbytes=None):
+        self = super().__new__(cls, median_us)
+        self.p90_us = float(median_us if p90_us is None else p90_us)
+        self.iters = int(iters)
+        self.nbytes = None if nbytes is None else int(nbytes)
+        return self
+
+
+def _timeit(fn, *args, warmup=2, iters=10, nbytes=None):
+    """Per-iteration wall-time sampling (each sample fully synchronized),
+    so the persisted median/p90 are robust to scheduler noise instead of
+    one mean over a single timed loop."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    samples = []
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    samples.sort()
+    median = samples[len(samples) // 2]
+    p90 = samples[min(len(samples) - 1, int(round(0.9 * (len(samples) - 1))))]
+    return BenchStat(median, p90, iters, nbytes)
 
 
 def bench_s1_throughput_scaling(rows, quick):
@@ -322,8 +350,73 @@ def bench_sketches(rows, quick):
     cm_ = sk.countmin_init(4, 1024)
     ids = jnp.asarray(np.random.default_rng(0).integers(0, 10000, 8192),
                       jnp.int32)
-    us = _timeit(lambda c, i: sk.countmin_add(c, i), cm_, ids, iters=5)
+    us = _timeit(lambda c, i: sk.countmin_add(c, i), cm_, ids, iters=5,
+                 nbytes=8192 * 4)
     rows.append(("sketch_countmin_8192", us, f"{8192 / us * 1e6:.0f} items/s"))
+    us = _timeit(lambda c, i: sk.countmin_add_query(c, i), cm_, ids, iters=5,
+                 nbytes=8192 * 4)
+    rows.append(("sketch_countmin_addquery_8192", us,
+                 f"{8192 / us * 1e6:.0f} items/s fused add+query"))
+
+
+def bench_kernel_dispatch(rows, quick):
+    """Stream-kernel dispatch wrappers as they run on THIS backend (jnp
+    reference on CPU, fused Pallas on TPU; the JSON envelope records
+    which) — the hot-path rows the perf trajectory gates."""
+    from repro.dist import compression as comp
+    from repro.streams import preprocess as prep
+    rng = np.random.default_rng(0)
+    n, d = 4096, 64
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    st = prep.norm_init(d)
+    fn = jax.jit(lambda s, xx: prep.norm_impute_fused(s, xx))
+    us = _timeit(fn, st, x, nbytes=n * d * 4)
+    rows.append(("kernel_norm_fused_4096x64", us,
+                 f"{n / us * 1e6:.0f} events/s"))
+
+    hids = jnp.asarray(rng.integers(0, 1 << 20, (2048, 8)), jnp.int32)
+    hvals = jnp.asarray(rng.normal(size=(2048, 8)), jnp.float32)
+    fn = jax.jit(lambda i, v: prep.hash_features(i, v, 256))
+    us = _timeit(fn, hids, hvals, nbytes=2048 * 8 * 8)
+    rows.append(("kernel_hash_features_2048x8", us,
+                 f"{2048 / us * 1e6:.0f} events/s"))
+
+    g = jnp.asarray(rng.normal(size=(65536,)), jnp.float32)
+    r0 = comp.ef_init(g)
+    fn = jax.jit(comp.ef_roundtrip)
+    us = _timeit(fn, r0, g, nbytes=65536 * 4)
+    rows.append(("kernel_ef_int8_64k", us,
+                 f"{65536 * 4 / us:.0f} MB/s"))
+    fn = jax.jit(lambda r, xx: comp.ef_topk_int8_roundtrip(r, xx, 6554))
+    us = _timeit(fn, r0, g, nbytes=65536 * 4)
+    rows.append(("kernel_ef_topk_int8_64k", us,
+                 f"{65536 * 4 / us:.0f} MB/s k=10%"))
+
+
+def bench_pipeline_fuse_xla(rows, quick):
+    """The fuse="xla" segment mode vs the default per-op jit: one row per
+    mode on the same cut so the trajectory tracks the fusion win (the
+    number quoted in standard_stream_pipeline's docstring)."""
+    from repro.core.pipeline import standard_stream_pipeline
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(256, 16)),
+                    jnp.float32)
+    y = jnp.asarray(np.random.default_rng(1).integers(0, 2, 256), jnp.int32)
+    stats = {}
+    for mode in ("op", "xla"):
+        pipe = standard_stream_pipeline(dim=16, sample_rate=0.5, fuse=mode)
+        states = pipe.init_states()
+        rng = jax.random.PRNGKey(0)
+
+        def step(states, rng):
+            states, out = pipe.run(states, {"x": x, "y": y, "rng": rng}, 4)
+            return states, out["rng"]
+
+        states, rng = step(states, rng)       # compile
+        stats[mode] = _timeit(lambda s, r: step(s, r)[1], states, rng,
+                              iters=20, nbytes=256 * 16 * 4)
+    rows.append(("pipeline_step_cut4_xla", stats["xla"],
+                 f"{256 / stats['xla'] * 1e6:.0f} events/s, "
+                 f"{stats['op'] / stats['xla']:.2f}x vs fuse=op"))
 
 
 def bench_train_micro(rows, quick):
@@ -381,10 +474,12 @@ def bench_roofline_summary(rows, quick):
 
 ALL_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                bench_s3_offload, bench_pipeline_partition,
+               bench_pipeline_fuse_xla,
                bench_dag_placement, bench_dag_place_multipool,
                bench_adaptive_codec_replan, bench_uplink_codec,
                bench_fusion_join,
                bench_s4_feature_matrix, bench_generators, bench_sketches,
+               bench_kernel_dispatch,
                bench_train_micro, bench_serve_micro, bench_roofline_summary]
 
 # fast perf-path subset for CI (--smoke): skips the DL train/serve micro
@@ -392,23 +487,66 @@ ALL_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
 # the process on any ERROR row so perf-path regressions break CI
 SMOKE_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                  bench_s3_offload, bench_pipeline_partition,
+                 bench_pipeline_fuse_xla,
                  bench_dag_placement, bench_dag_place_multipool,
                  bench_adaptive_codec_replan, bench_uplink_codec,
                  bench_fusion_join,
-                 bench_s4_feature_matrix, bench_generators, bench_sketches]
+                 bench_s4_feature_matrix, bench_generators, bench_sketches,
+                 bench_kernel_dispatch]
 
 
-def main() -> None:
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def rows_to_json(rows) -> dict:
+    """The persisted trajectory snapshot (``BENCH_<pr>.json``): schema tag,
+    provenance (sha, backend, jax version — the things that explain a perf
+    shift), and one object per row. No timestamp: re-running at the same
+    sha must produce a diff only in the timing fields."""
+    out = []
+    for name, us, derived in rows:
+        stat = us if isinstance(us, BenchStat) else BenchStat(float(us))
+        out.append({"name": name,
+                    "median_us": round(float(stat), 3),
+                    "p90_us": round(stat.p90_us, 3),
+                    "iters": stat.iters,
+                    "units": str(derived),
+                    "bytes": stat.nbytes})
+    return {"schema": BENCH_SCHEMA,
+            "git_sha": _git_sha(),
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "rows": out}
+
+
+def main(argv=None) -> int:
     import sys
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="fast subset + nonzero exit on any ERROR row (CI)")
-    args, _ = ap.parse_known_args()
+    ap.add_argument("--only", metavar="SUBSTR", default=None,
+                    help="run only bench functions whose name contains "
+                         "SUBSTR (e.g. --only sketch)")
+    ap.add_argument("--out", metavar="PATH", default=None,
+                    help="write the machine-readable BENCH_*.json snapshot "
+                         "(the perf-trajectory format compare.py gates on)")
+    args, _ = ap.parse_known_args(argv)
     quick = args.quick or args.smoke
+    benches = SMOKE_BENCHES if args.smoke else ALL_BENCHES
+    if args.only:
+        benches = [b for b in benches if args.only in b.__name__]
     rows = []
-    for bench in SMOKE_BENCHES if args.smoke else ALL_BENCHES:
+    for bench in benches:
         try:
             bench(rows, quick)
         except Exception as e:  # keep the harness green end-to-end
@@ -416,12 +554,18 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows_to_json(rows), f, indent=1)
+            f.write("\n")
+        print(f"wrote {len(rows)} rows -> {args.out}", file=sys.stderr)
     errors = [r for r in rows if str(r[2]).startswith("ERROR")]
     if args.smoke and errors:
         print(f"SMOKE FAILED: {len(errors)} benchmark(s) errored",
               file=sys.stderr)
-        sys.exit(1)
+        return 1
+    return 0
 
 
 if __name__ == '__main__':
-    main()
+    raise SystemExit(main())

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from repro.dist.compression import (dequantize_int8, ef_init, ef_roundtrip,
                                     ef_topk_roundtrip, quantize_int8,
                                     topk_densify, topk_sparsify)
+from repro.kernels import ops as kops
 
 # one int8 quantum, relative to the tensor's peak magnitude: the EF carry
 # keeps accumulated error under ~2 quanta (see ef_roundtrip's bounded-
@@ -81,10 +82,17 @@ def _identity_roundtrip(residual, x):
 def _topk_int8_roundtrip(residual, x, k_frac: float):
     """Composed sparsify-then-quantize wire round-trip with ONE shared
     error-feedback residual: the dropped coordinates AND the quantization
-    error of the survivors are both carried to the next round."""
-    xc = x.astype(jnp.float32) + residual
-    size = int(xc.size)
+    error of the survivors are both carried to the next round.
+
+    Where Pallas runs, the mask/amax/quantize/carry chain is one fused
+    ``kernels.ef_codec`` pass (selection by magnitude threshold —
+    identical to exact top-k for tie-free inputs, and the EF telescoping
+    identity holds for any selection, so ``error_bound`` is unchanged)."""
+    size = int(jnp.size(x))
     k = max(1, int(round(k_frac * size)))
+    if kops.pallas_available():
+        return kops.ef_topk_int8_roundtrip(residual, x, k=k)
+    xc = x.astype(jnp.float32) + residual
     v, i = topk_sparsify(xc, k)
     vq = dequantize_int8(*quantize_int8(v))      # int8 the survivors
     dec = topk_densify(vq, i, jnp.shape(xc))

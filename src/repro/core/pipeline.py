@@ -607,22 +607,35 @@ def alert_op(threshold: float = 3.0) -> Op:
 
 def standard_stream_pipeline(dim: int, sample_rate: float = 0.5,
                              drift_detector: str = "ddm",
-                             reservoir_k: int = 256) -> Pipeline:
+                             reservoir_k: int = 256,
+                             fuse: str = "op") -> Pipeline:
     """The default S2CE job: normalize -> sketch -> sample -> train -> drift
-    (the op-graph form of the orchestrator's old hard-coded stages)."""
+    (the op-graph form of the orchestrator's old hard-coded stages).
+
+    ``fuse="op"`` (default) keeps every cut bitwise-identical to the
+    reference — required when the placement migrates live state — and is
+    the measured winner on CPU (``pipeline_step_cut4_xla`` in the perf
+    trajectory tracks the ratio; ~0.94x there, so whole-segment fusion
+    buys nothing for these small ops). ``fuse="xla"`` jits each segment
+    as one fused program: pick it only where the trajectory row shows a
+    win on your backend AND the placement is static (cuts are only
+    allclose under fusion, not bitwise)."""
     return Pipeline([
         normalize_op(dim),
         sketch_op(dim),
         sample_op(dim, sample_rate, reservoir_k),
         logreg_train_op(dim),
         drift_op(drift_detector),
-    ])
+    ], fuse=fuse)
 
 
 def fanout_stream_graph(dim: int, sample_rate: float = 0.5,
                         drift_detector: str = "ddm",
                         reservoir_k: int = 256,
-                        anomaly_threshold: float = 3.0) -> OpGraph:
+                        anomaly_threshold: float = 3.0,
+                        fuse: str = "op") -> OpGraph:
+
+
     """The Fig. 2 fan-out/rejoin workflow a linear pipeline cannot express:
 
     ::
@@ -638,7 +651,10 @@ def fanout_stream_graph(dim: int, sample_rate: float = 0.5,
     learner branches rejoin at the alert head. Because the branches are
     dependency-independent, a frontier cut can keep e.g. `anomaly` on
     the edge while `train` offloads to the cloud — an assignment no
-    prefix cut of any op ordering can produce."""
+    prefix cut of any op ordering can produce.
+
+    ``fuse`` as in :func:`standard_stream_pipeline`: "op" (default) for
+    bitwise cut-invariance, "xla" for fused-segment throughput."""
     return OpGraph([
         normalize_op(dim),
         sketch_op(dim),
@@ -647,4 +663,4 @@ def fanout_stream_graph(dim: int, sample_rate: float = 0.5,
         logreg_train_op(dim),
         drift_op(drift_detector),
         alert_op(anomaly_threshold),
-    ])
+    ], fuse=fuse)

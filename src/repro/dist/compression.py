@@ -26,6 +26,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
+
 _QMAX = 127.0
 
 
@@ -74,9 +76,19 @@ def ef_quantize(residual: jax.Array, x: jax.Array
     return q, scale, xc - dequantize_int8(q, scale)
 
 
-def ef_roundtrip(residual: jax.Array, x: jax.Array
+def ef_roundtrip(residual: jax.Array, x: jax.Array, *,
+                 use_kernel: Optional[bool] = None
                  ) -> Tuple[jax.Array, jax.Array]:
-    """Wire round-trip with residual carry: ``(decoded, new_residual)``."""
+    """Wire round-trip with residual carry: ``(decoded, new_residual)``.
+
+    Where Pallas runs, the whole fold-amax-quantize-dequantize-carry
+    chain is ONE fused kernel (``kernels.ef_codec``); elsewhere the jnp
+    composition below. Paths agree to <=1 ulp and both satisfy the exact
+    EF identity ``decoded + new_residual == x + residual``."""
+    if use_kernel is None:
+        use_kernel = kops.pallas_available()
+    if use_kernel and kops.pallas_available():
+        return kops.ef_int8_roundtrip(residual, x)
     q, scale, residual = ef_quantize(residual, x)
     return dequantize_int8(q, scale).astype(x.dtype), residual
 
@@ -135,6 +147,24 @@ def ef_topk_roundtrip(residual: jax.Array, x: jax.Array, k: int
     """Wire round-trip with residual carry: ``(decoded, new_residual)``."""
     v, i, residual = ef_topk(residual, x, k)
     return topk_densify(v, i, jnp.shape(x)).astype(x.dtype), residual
+
+
+def ef_topk_int8_roundtrip(residual: jax.Array, x: jax.Array, k: int, *,
+                           use_kernel: Optional[bool] = None
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Composed top-k + int8 wire round-trip with ONE shared residual —
+    the uplink codec hot path (sparsify first, then quantize survivors).
+
+    Where Pallas runs this is a single fused kernel pass (selection by
+    the k-th-largest-magnitude threshold; identical to exact top-k for
+    tie-free inputs); elsewhere the jnp oracle. The EF telescoping
+    identity holds on both paths for any selection."""
+    from repro.kernels import ref as _kref
+    if use_kernel is None:
+        use_kernel = kops.pallas_available()
+    if use_kernel and kops.pallas_available():
+        return kops.ef_topk_int8_roundtrip(residual, x, k=int(k))
+    return _kref.ef_topk_int8_roundtrip_ref(residual, x, k)
 
 
 def compressed_allreduce_mean(

@@ -83,3 +83,92 @@ def countmin_update(ids: jax.Array, depth: int, width: int,
         interpret=interpret,
     )(ids[None, :], seeds[:, 0], seeds[:, 1])
     return out
+
+
+def _cms_uq_kernel(ids_ref, table_ref, a_ref, b_ref, tout_ref, est_ref,
+                   acc_scr, est_scr, *, blocks: int, depth: int, block: int,
+                   width: int, n: int):
+    phase = pl.program_id(0)
+    bi = pl.program_id(1)
+    di = pl.program_id(2)
+
+    ids = ids_ref[0].astype(jnp.int32)                     # (block,)
+    hi = ((ids * a_ref[0].astype(jnp.int32)
+           + b_ref[0].astype(jnp.int32)) % _P) % width     # (block,)
+    valid = (bi * block + jax.lax.iota(jnp.int32, block)) < n
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block, width), 1)
+    onehot = jnp.where(cols == hi[:, None], 1.0, 0.0)      # (block, width)
+
+    @pl.when(phase == 0)
+    def _accumulate():
+        @pl.when(jnp.logical_and(bi == 0, di == 0))
+        def _init():
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        counts = jnp.sum(jnp.where(valid[:, None], onehot, 0.0), axis=0)
+        acc_scr[di] = acc_scr[di] + counts
+
+    @pl.when(phase == 1)
+    def _query():
+        new_row = table_ref[0].astype(jnp.float32) + acc_scr[di]
+        tout_ref[0] = new_row.astype(jnp.int32)
+        # gather the MXU/VPU way: the one-hot row picks its sketch cell
+        est_d = jnp.sum(onehot * new_row[None, :], axis=1)  # (block,)
+
+        @pl.when(di == 0)
+        def _first():
+            est_scr[...] = est_d
+
+        @pl.when(di > 0)
+        def _min():
+            est_scr[...] = jnp.minimum(est_scr[...], est_d)
+
+        @pl.when(di == depth - 1)
+        def _emit():
+            est_ref[0] = est_scr[...].astype(jnp.int32)
+
+
+def countmin_update_query(ids: jax.Array, table: jax.Array,
+                          seeds: jax.Array, *, block: int = 1024,
+                          interpret: bool = False):
+    """Fused batched add-then-query: fold ``ids`` into ``table`` and
+    estimate each id's count against the UPDATED sketch in one pass.
+
+    ids: (n,) int32; table: (depth, width) int32; seeds: (depth, 2).
+    Returns ``(new_table (depth, width) int32, est (n,) int32)`` — the
+    same result as ``countmin_update`` + a per-depth gather + min, but
+    hashing each block once instead of twice and with no (n, depth)
+    estimate matrix materialized. Counts stay exact: they live in fp32
+    (< 2^24) until the final int32 cast.
+    """
+    depth, width = table.shape
+    n = ids.shape[0]
+    block = min(block, max(n, 8))
+    npad = -(-n // block) * block
+    if npad != n:
+        ids = jnp.pad(ids, (0, npad - n))
+    blocks = npad // block
+    kernel = functools.partial(_cms_uq_kernel, blocks=blocks, depth=depth,
+                               block=block, width=width, n=n)
+    new_table, est = pl.pallas_call(
+        kernel,
+        grid=(2, blocks, depth),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda p, b, d: (0, b)),
+            pl.BlockSpec((1, width), lambda p, b, d: (d, 0)),
+            pl.BlockSpec((1,), lambda p, b, d: (d,)),
+            pl.BlockSpec((1,), lambda p, b, d: (d,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, width), lambda p, b, d: (d, 0)),
+            pl.BlockSpec((1, block), lambda p, b, d: (0, b)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((depth, width), jnp.int32),
+            jax.ShapeDtypeStruct((1, npad), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((depth, width), jnp.float32),
+                        pltpu.VMEM((block,), jnp.float32)],
+        interpret=interpret,
+    )(ids[None, :], table, seeds[:, 0], seeds[:, 1])
+    return new_table, est[0, :n]

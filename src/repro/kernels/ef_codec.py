@@ -1,0 +1,184 @@
+"""Fused error-feedback codec round-trip Pallas kernels (uplink hot path).
+
+``dist/compression.py``'s wire round-trips are chains of small jnp
+programs — fold residual, global amax, quantize, dequantize, subtract —
+each materializing a tensor-sized intermediate in HBM. On the uplink
+path the orchestrator runs one round-trip per crossing batch tensor per
+step, so the traffic is all memory-bound. These kernels fuse each
+round-trip into one ``pallas_call`` over the flattened tensor:
+
+* :func:`ef_int8_roundtrip` — int8 error-feedback round-trip
+  ``(residual, x) -> (decoded, residual')``. Two-phase grid: phase 0
+  reduces the global amax of ``x + residual`` into VMEM scratch (max is
+  an exact reduction, so the scale matches ``ef_roundtrip`` exactly);
+  phase 1 quantizes, dequantizes, and emits the fresh residual per
+  block. Outputs agree with ``dist.compression.ef_roundtrip`` to <=1 ulp
+  (the scale division may fuse differently across the two programs);
+  the EF identity ``decoded + residual' == x + residual`` is exact.
+
+* :func:`ef_topk_int8_roundtrip` — the composed sparsify-then-quantize
+  round-trip with ONE shared residual. Top-k selection is expressed as a
+  magnitude threshold (the k-th largest ``|x + residual|``, found with
+  ``jax.lax.top_k`` on the host side — selection is the one genuinely
+  global, sort-shaped step); the kernel then fuses mask + survivor amax
+  + quantize-dequantize + residual in one pass. For tie-free inputs this
+  is bitwise the same selection as exact top-k, and the error-feedback
+  telescoping identity ``decoded + residual' == x + residual`` holds for
+  ANY selection, ties included.
+
+Twins: ``ref.ef_int8_roundtrip_ref`` / ``ref.ef_topk_int8_roundtrip_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_QMAX = 127.0
+
+
+def _blocked_1d(t: jax.Array, block: int):
+    """Flatten + zero-pad to (blocks, block)."""
+    flat = jnp.ravel(t).astype(jnp.float32)
+    size = flat.shape[0]
+    npad = -(-size // block) * block
+    if npad != size:
+        flat = jnp.pad(flat, (0, npad - size))
+    return flat.reshape(npad // block, block), size
+
+
+def _int8_kernel(x_ref, r_ref, dec_ref, rout_ref, amax_scr, scale_scr, *,
+                 blocks: int):
+    phase = pl.program_id(0)
+    bi = pl.program_id(1)
+    xc = x_ref[...] + r_ref[...]                          # (1, block)
+
+    @pl.when(phase == 0)
+    def _reduce():
+        @pl.when(bi == 0)
+        def _init():
+            amax_scr[0, 0] = 0.0
+
+        amax_scr[0, 0] = jnp.maximum(amax_scr[0, 0], jnp.max(jnp.abs(xc)))
+
+        @pl.when(bi == blocks - 1)
+        def _scale():
+            scale_scr[0, 0] = jnp.maximum(amax_scr[0, 0], 1e-30) / _QMAX
+
+    @pl.when(phase == 1)
+    def _roundtrip():
+        scale = scale_scr[0, 0]
+        q = jnp.clip(jnp.round(xc / scale), -_QMAX, _QMAX)
+        dec = q * scale
+        dec_ref[...] = dec
+        rout_ref[...] = xc - dec
+
+
+def ef_int8_roundtrip(residual: jax.Array, x: jax.Array, *,
+                      block: int = 2048, interpret: bool = False):
+    """Fused int8 EF wire round-trip: ``(decoded, new_residual)``.
+
+    Agrees with ``dist.compression.ef_roundtrip`` to <=1 ulp; the
+    internal EF identity is exact."""
+    xb, size = _blocked_1d(x, block)
+    rb, _ = _blocked_1d(residual, block)
+    blocks = xb.shape[0]
+    kernel = functools.partial(_int8_kernel, blocks=blocks)
+    dec, rout = pl.pallas_call(
+        kernel,
+        grid=(2, blocks),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda p, b: (b, 0)),
+            pl.BlockSpec((1, block), lambda p, b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda p, b: (b, 0)),
+            pl.BlockSpec((1, block), lambda p, b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(xb.shape, jnp.float32),
+            jax.ShapeDtypeStruct(xb.shape, jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(xb, rb)
+    shape = jnp.shape(x)
+    return (dec.reshape(-1)[:size].reshape(shape).astype(x.dtype),
+            rout.reshape(-1)[:size].reshape(shape))
+
+
+def _topk_int8_kernel(x_ref, r_ref, t_ref, dec_ref, rout_ref,
+                      amax_scr, scale_scr, *, blocks: int):
+    phase = pl.program_id(0)
+    bi = pl.program_id(1)
+    xc = x_ref[...] + r_ref[...]                          # (1, block)
+    kept = jnp.abs(xc) >= t_ref[0, 0]
+
+    @pl.when(phase == 0)
+    def _reduce():
+        @pl.when(bi == 0)
+        def _init():
+            amax_scr[0, 0] = 0.0
+
+        amax_scr[0, 0] = jnp.maximum(
+            amax_scr[0, 0], jnp.max(jnp.where(kept, jnp.abs(xc), 0.0)))
+
+        @pl.when(bi == blocks - 1)
+        def _scale():
+            scale_scr[0, 0] = jnp.maximum(amax_scr[0, 0], 1e-30) / _QMAX
+
+    @pl.when(phase == 1)
+    def _roundtrip():
+        scale = scale_scr[0, 0]
+        q = jnp.clip(jnp.round(jnp.where(kept, xc, 0.0) / scale),
+                     -_QMAX, _QMAX)
+        dec = jnp.where(kept, q * scale, 0.0)
+        dec_ref[...] = dec
+        rout_ref[...] = xc - dec
+
+
+def ef_topk_int8_roundtrip(residual: jax.Array, x: jax.Array, k: int, *,
+                           block: int = 2048, interpret: bool = False):
+    """Fused top-k + int8 EF wire round-trip with one shared residual.
+
+    Keeps the coordinates of ``x + residual`` whose magnitude reaches the
+    k-th largest, int8-quantizes the survivors against their own amax,
+    and carries dropped mass AND quantization error forward:
+    ``(decoded, new_residual)``."""
+    xc = jnp.ravel(x).astype(jnp.float32) + jnp.ravel(residual)
+    size = xc.shape[0]
+    k = max(1, min(int(k), size))
+    # the selection threshold — the one sort-shaped global step
+    t = jax.lax.top_k(jnp.abs(xc), k)[0][-1]
+    xb, _ = _blocked_1d(x, block)
+    rb, _ = _blocked_1d(residual, block)
+    blocks = xb.shape[0]
+    kernel = functools.partial(_topk_int8_kernel, blocks=blocks)
+    dec, rout = pl.pallas_call(
+        kernel,
+        grid=(2, blocks),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda p, b: (b, 0)),
+            pl.BlockSpec((1, block), lambda p, b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda p, b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda p, b: (b, 0)),
+            pl.BlockSpec((1, block), lambda p, b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(xb.shape, jnp.float32),
+            jax.ShapeDtypeStruct(xb.shape, jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(xb, rb, t.reshape(1, 1))
+    shape = jnp.shape(x)
+    return (dec.reshape(-1)[:size].reshape(shape).astype(x.dtype),
+            rout.reshape(-1)[:size].reshape(shape))

@@ -16,13 +16,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import countmin as _cms
+from repro.kernels import ef_codec as _ef
 from repro.kernels import flash_attention as _fa
 from repro.kernels import mamba_scan as _ms
+from repro.kernels import preprocess as _pp
 from repro.kernels import rwkv6_wkv as _wkv
 
 
 def _interpret() -> bool:
-    return os.environ.get("REPRO_FORCE_PALLAS_INTERPRET", "0") == "1"
+    # JAX_PALLAS_INTERPRET is the conventional spelling the CI oracle job
+    # uses; REPRO_FORCE_PALLAS_INTERPRET kept for back-compat.
+    return (os.environ.get("REPRO_FORCE_PALLAS_INTERPRET", "0") == "1"
+            or os.environ.get("JAX_PALLAS_INTERPRET", "0") == "1")
 
 
 def pallas_available() -> bool:
@@ -64,3 +69,34 @@ def mamba_scan(dt, x, Bm, Cm, A, h0, *, chunk: int = 128, bd: int = 256):
 def countmin_update(ids, *, depth: int, width: int, seeds, block: int = 1024):
     return _cms.countmin_update(ids, depth, width, seeds, block=block,
                                 interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def countmin_update_query(ids, table, seeds, *, block: int = 1024):
+    return _cms.countmin_update_query(ids, table, seeds, block=block,
+                                      interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("impute", "block"))
+def fused_normalize(x, n0, mean0, m20, *, impute: bool = True,
+                    block: int = 256):
+    return _pp.fused_normalize(x, n0, mean0, m20, impute=impute,
+                               block=block, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "seed", "block"))
+def hash_features(ids, vals, *, dim: int, seed: int = 17, block: int = 256):
+    return _pp.fused_hash_features(ids, vals, dim, seed=seed, block=block,
+                                   interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def ef_int8_roundtrip(residual, x, *, block: int = 2048):
+    return _ef.ef_int8_roundtrip(residual, x, block=block,
+                                 interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def ef_topk_int8_roundtrip(residual, x, *, k: int, block: int = 2048):
+    return _ef.ef_topk_int8_roundtrip(residual, x, k, block=block,
+                                      interpret=_interpret())

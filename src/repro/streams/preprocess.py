@@ -14,6 +14,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
 from repro.streams.events import StreamBatch
 
 
@@ -54,6 +55,29 @@ def impute_with_mean(state: NormState, x: jax.Array) -> jax.Array:
     return jnp.where(jnp.isnan(x), state.mean[None, :], x)
 
 
+def norm_impute_fused(state: NormState, x: jax.Array, *,
+                      impute: bool = True,
+                      use_kernel: Optional[bool] = None
+                      ) -> Tuple[NormState, jax.Array]:
+    """Impute + Welford update + normalize as ONE fused step.
+
+    On TPU (or with Pallas interpret forced) this dispatches to the fused
+    ``kernels.preprocess`` kernel — one pass over the batch, no (n, d)
+    intermediates in HBM. Elsewhere it composes ``impute_with_mean`` +
+    ``norm_update_apply``, so CPU results are bitwise the legacy path.
+    The two paths are tolerance-equal (the kernel accumulates raw
+    moments; the jnp path centers first)."""
+    if use_kernel is None:
+        use_kernel = kops.pallas_available()
+    if use_kernel and kops.pallas_available():
+        y, n1, mean1, m21 = kops.fused_normalize(
+            x, state.n, state.mean, state.m2, impute=impute)
+        return NormState(n1, mean1, m21), y
+    if impute:
+        x = impute_with_mean(state, x)
+    return norm_update_apply(state, x)
+
+
 # ---------------------------------------------------------------------------
 # Online PCA-lite (Oja's rule) — streaming dimensionality reduction
 # ---------------------------------------------------------------------------
@@ -85,8 +109,17 @@ def oja_update_project(state: OjaState, x: jax.Array, lr: float = 1e-2
 # ---------------------------------------------------------------------------
 
 def hash_features(ids: jax.Array, vals: jax.Array, dim: int,
-                  seed: int = 17) -> jax.Array:
-    """ids/vals: (n, f) -> dense (n, dim) via signed feature hashing."""
+                  seed: int = 17, *,
+                  use_kernel: Optional[bool] = None) -> jax.Array:
+    """ids/vals: (n, f) -> dense (n, dim) via signed feature hashing.
+
+    Dispatches to the Pallas one-hot-scatter kernel where available
+    (bitwise-identical hash — pure int32 arithmetic both paths)."""
+    if use_kernel is None:
+        use_kernel = kops.pallas_available()
+    if use_kernel and kops.pallas_available():
+        return kops.hash_features(ids.astype(jnp.int32), vals,
+                                  dim=dim, seed=seed).astype(vals.dtype)
     a = 2 * seed + 1
     h = (ids * a + 0x9E37) % 2_147_483_647
     slot = h % dim
@@ -99,10 +132,14 @@ def hash_features(ids: jax.Array, vals: jax.Array, dim: int,
 def preprocess_batch(state, batch: StreamBatch,
                      normalize: bool = True, impute: bool = True
                      ) -> Tuple[object, StreamBatch]:
-    """The standard edge-side preprocessing pipeline for feature streams."""
+    """The standard edge-side preprocessing pipeline for feature streams.
+
+    When normalizing, routes through :func:`norm_impute_fused` so the
+    whole impute+update+normalize step runs as one Pallas kernel on TPU
+    (and stays the bitwise-identical legacy composition on CPU)."""
     x = batch.data["x"]
-    if impute:
-        x = impute_with_mean(state, x)
     if normalize:
-        state, x = norm_update_apply(state, x)
+        state, x = norm_impute_fused(state, x, impute=impute)
+    elif impute:
+        x = impute_with_mean(state, x)
     return state, batch.with_data(x=x)

@@ -7,7 +7,8 @@ node ships upstream instead of raw events.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+import warnings
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +16,7 @@ import numpy as np
 
 from repro.kernels import ops as kops
 from repro.kernels.countmin import hash_ids
-from repro.kernels.ref import countmin_ref
+from repro.kernels.ref import countmin_ref, countmin_update_query_ref
 
 
 class CountMin(NamedTuple):
@@ -29,15 +30,65 @@ def countmin_init(depth: int = 4, width: int = 1024, seed: int = 0) -> CountMin:
     return CountMin(jnp.zeros((depth, width), jnp.int32), seeds)
 
 
-def countmin_add(cm: CountMin, ids: jax.Array, use_kernel: bool = False
-                 ) -> CountMin:
+# Which path actually ran, per entry point. A kernel request that silently
+# fell back to the reference used to be invisible (and untestable); now the
+# dispatcher counts every call and warns on requested-but-unavailable. The
+# counter lives module-level rather than on CountMin so the sketch stays a
+# plain int32 pytree (jit/shard_map-safe).
+_DISPATCH_COUNTS = {"pallas": 0, "reference": 0}
+
+
+def dispatch_counts() -> dict:
+    """Snapshot of {"pallas": n, "reference": n} calls since last reset."""
+    return dict(_DISPATCH_COUNTS)
+
+
+def reset_dispatch_counts() -> None:
+    _DISPATCH_COUNTS["pallas"] = 0
+    _DISPATCH_COUNTS["reference"] = 0
+
+
+def _resolve_kernel(use_kernel: Optional[bool], who: str) -> bool:
+    """None -> auto (kernel wherever Pallas runs); True -> kernel, with a
+    loud warning + fallback when unavailable; False -> reference."""
+    available = kops.pallas_available()
+    if use_kernel is None:
+        picked = available
+    elif use_kernel and not available:
+        warnings.warn(
+            f"{who}: use_kernel=True but the Pallas path is unavailable "
+            "(no TPU backend and interpret mode not forced); falling back "
+            "to the jnp reference.", RuntimeWarning, stacklevel=3)
+        picked = False
+    else:
+        picked = use_kernel
+    _DISPATCH_COUNTS["pallas" if picked else "reference"] += 1
+    return picked
+
+
+def countmin_add(cm: CountMin, ids: jax.Array,
+                 use_kernel: Optional[bool] = None) -> CountMin:
     depth, width = cm.table.shape
-    if use_kernel and kops.pallas_available():
+    if _resolve_kernel(use_kernel, "countmin_add"):
         inc = kops.countmin_update(ids, depth=depth, width=width,
                                    seeds=cm.seeds)
     else:
         inc = countmin_ref(ids, depth, width, np.asarray(cm.seeds))
     return cm._replace(table=cm.table + inc)
+
+
+def countmin_add_query(cm: CountMin, ids: jax.Array,
+                       use_kernel: Optional[bool] = None
+                       ) -> Tuple[CountMin, jax.Array]:
+    """Fold ``ids`` into the sketch AND estimate each id's count against
+    the updated table in one pass: ``(cm', est (n,) int32)``. On the
+    Pallas path the batch is hashed once (fused kernel); the reference
+    path is the scatter-add + gather oracle. Both paths agree exactly."""
+    if _resolve_kernel(use_kernel, "countmin_add_query"):
+        table, est = kops.countmin_update_query(ids, cm.table, cm.seeds)
+    else:
+        table, est = countmin_update_query_ref(ids, cm.table, cm.seeds)
+    return cm._replace(table=table), est
 
 
 def countmin_query(cm: CountMin, ids: jax.Array) -> jax.Array:

@@ -1,0 +1,181 @@
+"""Bench harness + perf-trajectory gate: the --smoke/--out JSON contract
+and compare.py's regression semantics (these are CI's perf guardrails, so
+they get the same test coverage as product code)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks import compare as bench_compare
+from benchmarks import run as bench_run
+
+
+def _snapshot(rows):
+    """A synthetic s2ce-bench/1 document."""
+    return {"schema": bench_run.BENCH_SCHEMA, "git_sha": "deadbee",
+            "backend": "cpu", "jax_version": "0.0.0",
+            "rows": [{"name": n, "median_us": m, "p90_us": m * 1.2,
+                      "iters": 5, "units": u, "bytes": None}
+                     for n, m, u in rows]}
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# run.py: BenchStat / --smoke / --only / --out
+# ---------------------------------------------------------------------------
+
+def test_benchstat_is_a_float_with_stats():
+    s = bench_run.BenchStat(10.0, p90_us=14.0, iters=7, nbytes=64)
+    assert float(s) == 10.0 and s + 1 == 11.0       # old call sites work
+    assert f"{s:.2f}" == "10.00"
+    assert s.p90_us == 14.0 and s.iters == 7 and s.nbytes == 64
+    bare = bench_run.BenchStat(3.5)                 # manual-timer rows
+    assert bare.p90_us == 3.5 and bare.iters == 1 and bare.nbytes is None
+
+
+def test_timeit_returns_sampled_stat():
+    s = bench_run._timeit(lambda x: x + 1, 41, warmup=1, iters=5, nbytes=8)
+    assert isinstance(s, bench_run.BenchStat)
+    assert s > 0 and s.p90_us >= s and s.iters == 5 and s.nbytes == 8
+
+
+def test_smoke_only_out_writes_schema(tmp_path):
+    out = tmp_path / "BENCH_test.json"
+    rc = bench_run.main(["--smoke", "--only", "sketch", "--out", str(out)])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert doc["schema"] == bench_run.BENCH_SCHEMA
+    assert doc["backend"] and doc["jax_version"] and doc["git_sha"]
+    assert "timestamp" not in doc                   # determinism by design
+    assert len(doc["rows"]) >= 1
+    for row in doc["rows"]:
+        assert set(row) == {"name", "median_us", "p90_us", "iters",
+                            "units", "bytes"}
+        assert row["median_us"] > 0 and row["iters"] >= 1
+        assert isinstance(row["name"], str) and isinstance(row["units"], str)
+
+
+def test_out_is_deterministic_modulo_timings(tmp_path):
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    assert bench_run.main(["--smoke", "--only", "sketch", "--out", str(a)]) == 0
+    assert bench_run.main(["--smoke", "--only", "sketch", "--out", str(b)]) == 0
+    da, db = json.loads(a.read_text()), json.loads(b.read_text())
+    strip = lambda d: {**d, "rows": [
+        {k: v for k, v in r.items()
+         if k not in ("median_us", "p90_us", "units")} for r in d["rows"]]}
+    assert strip(da) == strip(db)                   # only timings may differ
+    assert [r["name"] for r in da["rows"]] == [r["name"] for r in db["rows"]]
+
+
+def test_only_filter_unknown_name_runs_nothing(tmp_path):
+    out = tmp_path / "empty.json"
+    rc = bench_run.main(["--smoke", "--only", "no_such_bench",
+                         "--out", str(out)])
+    assert rc == 0
+    assert json.loads(out.read_text())["rows"] == []
+
+
+def test_committed_baseline_is_valid_and_covers_smoke():
+    """The committed trajectory point must stay loadable, well-formed,
+    and >= 10 smoke rows (the gate is meaningless on a thin baseline)."""
+    doc = bench_compare.load(bench_compare.latest_baseline())
+    assert doc["schema"] == bench_run.BENCH_SCHEMA
+    rows = doc["rows"]
+    assert len(rows) >= 10
+    names = [r["name"] for r in rows]
+    assert len(names) == len(set(names))            # names are the join key
+    for must in ("sketch_countmin_8192", "kernel_ef_int8_64k",
+                 "pipeline_step_cut4", "pipeline_step_cut4_xla"):
+        assert must in names
+
+
+# ---------------------------------------------------------------------------
+# compare.py: gate semantics
+# ---------------------------------------------------------------------------
+
+BASE = [("fast_row", 10.0, "x"), ("slow_row", 1000.0, "y"),
+        ("other_row", 500.0, "z")]
+
+
+def test_compare_passes_identical_replay(tmp_path):
+    base = _write(tmp_path, "base.json", _snapshot(BASE))
+    new = _write(tmp_path, "new.json", _snapshot(BASE))
+    assert bench_compare.main([new, "--baseline", base]) == 0
+
+
+def test_compare_flags_2x_regression(tmp_path):
+    base = _write(tmp_path, "base.json", _snapshot(BASE))
+    slowed = [(n, m * 2 if n == "slow_row" else m, u) for n, m, u in BASE]
+    new = _write(tmp_path, "new.json", _snapshot(slowed))
+    assert bench_compare.main([new, "--baseline", base]) == 1
+    failures, _ = bench_compare.compare(_snapshot(slowed), _snapshot(BASE))
+    assert len(failures) == 1 and "slow_row" in failures[0]
+
+
+def test_compare_flags_1_5x_regression(tmp_path):
+    """The acceptance bar: a synthetic 1.5x slowdown must exit nonzero
+    at the default 1.25x threshold."""
+    base = _write(tmp_path, "base.json", _snapshot(BASE))
+    slowed = [(n, m * 1.5 if n == "slow_row" else m, u) for n, m, u in BASE]
+    new = _write(tmp_path, "new.json", _snapshot(slowed))
+    assert bench_compare.main([new, "--baseline", base]) == 1
+
+
+def test_compare_noise_floor_never_gates(tmp_path):
+    """Sub-min-us rows can swing wildly without failing the gate."""
+    base = _write(tmp_path, "base.json", _snapshot(BASE))
+    noisy = [(n, m * 5 if n == "fast_row" else m, u) for n, m, u in BASE]
+    new = _write(tmp_path, "new.json", _snapshot(noisy))
+    assert bench_compare.main([new, "--baseline", base]) == 0
+
+
+def test_compare_missing_row_fails(tmp_path):
+    base = _write(tmp_path, "base.json", _snapshot(BASE))
+    new = _write(tmp_path, "new.json", _snapshot(BASE[:-1]))
+    assert bench_compare.main([new, "--baseline", base]) == 1
+
+
+def test_compare_error_row_fails(tmp_path):
+    base = _write(tmp_path, "base.json", _snapshot(BASE))
+    errored = [(n, m, "ERROR ValueError: boom" if n == "slow_row" else u)
+               for n, m, u in BASE]
+    new = _write(tmp_path, "new.json", _snapshot(errored))
+    assert bench_compare.main([new, "--baseline", base]) == 1
+
+
+def test_compare_new_rows_are_reported_not_gated(tmp_path):
+    base = _write(tmp_path, "base.json", _snapshot(BASE))
+    grown = BASE + [("brand_new_row", 9999.0, "w")]
+    new = _write(tmp_path, "new.json", _snapshot(grown))
+    assert bench_compare.main([new, "--baseline", base]) == 0
+    _, lines = bench_compare.compare(_snapshot(grown), _snapshot(BASE))
+    assert any("brand_new_row" in l and l.startswith("new") for l in lines)
+
+
+def test_compare_calibrate_normalizes_machine_speed(tmp_path):
+    """A uniformly-2x-slower machine passes when calibrated by any row,
+    but a real extra regression on top of that still fails."""
+    base = _write(tmp_path, "base.json", _snapshot(BASE))
+    uniform = [(n, m * 2, u) for n, m, u in BASE]
+    new = _write(tmp_path, "uniform.json", _snapshot(uniform))
+    assert bench_compare.main([new, "--baseline", base]) == 1  # uncalibrated
+    assert bench_compare.main([new, "--baseline", base,
+                               "--calibrate", "other_row"]) == 0
+    worse = [(n, m * 2 * (1.6 if n == "slow_row" else 1), u)
+             for n, m, u in BASE]
+    new2 = _write(tmp_path, "worse.json", _snapshot(worse))
+    assert bench_compare.main([new2, "--baseline", base,
+                               "--calibrate", "other_row"]) == 1
+
+
+def test_compare_rejects_non_snapshot(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"hello": 1}))
+    with pytest.raises(ValueError):
+        bench_compare.load(str(bad))

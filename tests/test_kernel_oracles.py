@@ -1,0 +1,323 @@
+"""Differential-test oracles: EVERY Pallas kernel against its pure-jnp
+twin in ``kernels/ref.py``, across randomized shapes/dtypes, in interpret
+mode — so the whole kernel surface is exercised on CPU-only CI (the
+``kernels-interpret`` job runs this file with ``JAX_PALLAS_INTERPRET=1``).
+
+Two layers are covered:
+
+* the raw kernels (``interpret=True`` passed explicitly), swept over
+  seeded random shapes — bitwise where the kernel math is exact (hashing,
+  count-min), tolerance elsewhere (reductions that reassociate);
+* the jit'd dispatch wrappers in ``kernels/ops.py`` with the interpret
+  env forced — previously this layer had zero CPU coverage. Each wrapper
+  call uses shapes unique to this file: the interpret flag is read at
+  trace time (NOT a jit static arg), so a cache hit from a same-shape
+  trace made under different env would silently test the wrong path.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.countmin import countmin_update, countmin_update_query
+from repro.kernels.ef_codec import ef_int8_roundtrip, ef_topk_int8_roundtrip
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan_bd
+from repro.kernels.preprocess import fused_hash_features, fused_normalize
+from repro.kernels.rwkv6_wkv import rwkv6_wkv
+
+
+# ---------------------------------------------------------------------------
+# Fused preprocess: impute + Welford + normalize
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("impute", [True, False])
+def test_fused_normalize_random_shapes(seed, impute):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 200))
+    d = int(rng.integers(1, 40))
+    block = int(rng.choice([8, 32, 256]))
+    n0 = float(rng.integers(0, 500))
+    mean0 = rng.normal(size=d).astype(np.float32)
+    m20 = (rng.random(d).astype(np.float32) + 0.1) * max(n0, 1.0)
+    x = (rng.normal(size=(n, d)) + rng.normal(size=d)).astype(np.float32)
+    if impute:
+        x[rng.random((n, d)) < 0.15] = np.nan
+    y, n1, mean1, m21 = fused_normalize(
+        jnp.asarray(x), n0, mean0, m20, impute=impute, block=block,
+        interpret=True)
+    yr, n1r, mean1r, m21r = ref.fused_normalize_ref(
+        x, n0, mean0, m20, impute=impute)
+    # raw-moment vs centered two-pass accumulation: tolerance, not bitwise
+    np.testing.assert_allclose(float(n1), float(n1r))
+    np.testing.assert_allclose(np.asarray(mean1), np.asarray(mean1r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m21), np.asarray(m21r),
+                               rtol=2e-3, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-3, atol=1e-3)
+    assert not np.isnan(np.asarray(y)).any()
+
+
+def test_fused_normalize_matches_streams_composition():
+    """The oracle itself is pinned to the streams/preprocess composition,
+    so kernel -> ref -> production path is one chain of guarantees."""
+    from repro.streams import preprocess as prep
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(33, 9)).astype(np.float32)
+    x[2, 4] = np.nan
+    st = prep.NormState(jnp.asarray(12.0),
+                        jnp.asarray(rng.normal(size=9), jnp.float32),
+                        jnp.asarray(rng.random(9) * 12, jnp.float32))
+    st2, y2 = prep.norm_update_apply(st, prep.impute_with_mean(
+        st, jnp.asarray(x)))
+    yr, n1r, mean1r, m21r = ref.fused_normalize_ref(
+        x, 12.0, np.asarray(st.mean), np.asarray(st.m2))
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(yr))
+    np.testing.assert_array_equal(np.asarray(st2.m2), np.asarray(m21r))
+
+
+# ---------------------------------------------------------------------------
+# Fused feature hashing (bitwise: pure int32 arithmetic on both paths)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+def test_fused_hash_features_bitwise(seed):
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(1, 150))
+    f = int(rng.integers(1, 9))
+    dim = int(rng.choice([16, 64, 256]))
+    block = int(rng.choice([8, 64]))
+    ids = jnp.asarray(rng.integers(0, 1 << 20, (n, f)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    out = fused_hash_features(ids, vals, dim, seed=seed + 1, block=block,
+                              interpret=True)
+    want = ref.hash_features_ref(ids, vals, dim, seed=seed + 1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Count-Min fused update+query (exact: integer counts in fp32 < 2^24)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+def test_countmin_update_query_exact(seed):
+    rng = np.random.default_rng(200 + seed)
+    n = int(rng.integers(5, 2000))
+    depth = int(rng.integers(1, 5))
+    width = int(rng.choice([32, 128, 512]))
+    block = int(rng.choice([64, 1024]))
+    ids = jnp.asarray(rng.integers(0, 50_000, n), jnp.int32)
+    seeds = jnp.asarray(rng.integers(1, 2**14, (depth, 2)) * 2 + 1, jnp.int32)
+    table = jnp.asarray(rng.integers(0, 100, (depth, width)), jnp.int32)
+    new_table, est = countmin_update_query(ids, table, seeds, block=block,
+                                           interpret=True)
+    want_table, want_est = ref.countmin_update_query_ref(ids, table, seeds)
+    np.testing.assert_array_equal(np.asarray(new_table),
+                                  np.asarray(want_table))
+    np.testing.assert_array_equal(np.asarray(est), np.asarray(want_est))
+
+
+def test_countmin_update_query_consistent_with_update():
+    """The fused kernel's table must equal countmin_update's increment
+    applied to the prior table (same hash family, same exactness)."""
+    rng = np.random.default_rng(3)
+    ids = jnp.asarray(rng.integers(0, 9999, 777), jnp.int32)
+    seeds = jnp.asarray(rng.integers(1, 2**14, (3, 2)) * 2 + 1, jnp.int32)
+    table = jnp.zeros((3, 64), jnp.int32)
+    inc = countmin_update(ids, 3, 64, seeds, interpret=True)
+    new_table, _ = countmin_update_query(ids, table, seeds, interpret=True)
+    np.testing.assert_array_equal(np.asarray(new_table), np.asarray(inc))
+
+
+# ---------------------------------------------------------------------------
+# EF codec round-trips (<=1 ulp vs ref; telescoping identity near-exact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+def test_ef_int8_roundtrip_matches_ref(seed):
+    rng = np.random.default_rng(300 + seed)
+    shape = tuple(rng.integers(1, 60, size=int(rng.integers(1, 3))))
+    block = int(rng.choice([16, 512]))
+    x = jnp.asarray(rng.normal(size=shape) * 3, jnp.float32)
+    res = jnp.asarray(rng.normal(size=shape) * 0.01, jnp.float32)
+    dec, rout = ef_int8_roundtrip(res, x, block=block, interpret=True)
+    decr, routr = ref.ef_int8_roundtrip_ref(res, x)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(decr),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rout), np.asarray(routr),
+                               rtol=0, atol=1e-6)
+    # EF telescoping identity: decoded + residual' == x + residual
+    np.testing.assert_allclose(np.asarray(dec + rout), np.asarray(x + res),
+                               rtol=0, atol=1e-6)
+    # int8 quantization really happened: <= 255 distinct decoded values
+    assert len(np.unique(np.asarray(dec))) <= 255
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_ef_topk_int8_roundtrip_matches_ref(seed):
+    rng = np.random.default_rng(400 + seed)
+    size = int(rng.integers(4, 3000))
+    k = int(rng.integers(1, size + 1))
+    block = int(rng.choice([16, 512]))
+    x = jnp.asarray(rng.normal(size=size), jnp.float32)
+    res = jnp.asarray(rng.normal(size=size) * 0.05, jnp.float32)
+    dec, rout = ef_topk_int8_roundtrip(res, x, k, block=block, interpret=True)
+    decr, routr = ref.ef_topk_int8_roundtrip_ref(res, x, k)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(decr),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rout), np.asarray(routr),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(dec + rout), np.asarray(x + res),
+                               rtol=0, atol=1e-6)
+    # threshold selection keeps >= k coordinates (== k for tie-free draws)
+    nnz = int((np.asarray(dec) != 0).sum())
+    assert nnz >= min(k, size)
+
+
+def test_ef_residual_stays_bounded_over_stream():
+    """50 EF round-trips through the fused kernel: the carried residual
+    must stay bounded by ~one quantum of the running peak, not grow."""
+    rng = np.random.default_rng(9)
+    res = jnp.zeros((257,), jnp.float32)
+    for step in range(50):
+        x = jnp.asarray(rng.normal(size=257), jnp.float32)
+        dec, res = ef_int8_roundtrip(res, x, block=64, interpret=True)
+    assert float(jnp.max(jnp.abs(res))) < 2.5 * float(jnp.max(jnp.abs(x))) / 127
+
+
+# ---------------------------------------------------------------------------
+# Existing kernels: compact random-shape oracle checks (flash/rwkv/mamba)
+# so this one file sweeps the full kernel surface under interpret mode.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(2))
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_random_oracle(seed, dtype):
+    rng = np.random.default_rng(500 + seed)
+    S = int(rng.choice([64, 96]))
+    H, D = 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, S, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (1, S, H, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (1, S, H, D), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=True, bq=32, bk=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_rwkv6_wkv_random_oracle(seed):
+    rng = np.random.default_rng(600 + seed)
+    S = int(rng.choice([24, 40]))
+    hs = int(rng.choice([16, 32]))
+    ks = jax.random.split(jax.random.PRNGKey(seed + 50), 6)
+    r = jax.random.normal(ks[0], (1, S, 2, hs)) * 0.5
+    k = jax.random.normal(ks[1], (1, S, 2, hs)) * 0.5
+    v = jax.random.normal(ks[2], (1, S, 2, hs)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (1, S, 2, hs)) - 2.0)
+    u = jax.random.normal(ks[4], (2, hs)) * 0.3
+    h0 = jax.random.normal(ks[5], (1, 2, hs, hs)) * 0.1
+    o, h = rwkv6_wkv(r, k, v, lw, u, h0, chunk=8, interpret=True)
+    o_ref, h_ref = ref.rwkv6_wkv_ref(r, k, v, lw, u, h0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_mamba_scan_random_oracle(seed):
+    rng = np.random.default_rng(700 + seed)
+    S = int(rng.choice([24, 48]))
+    dI = int(rng.choice([32, 64]))
+    ks = jax.random.split(jax.random.PRNGKey(seed + 80), 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (1, S, dI)) - 2)
+    x = jax.random.normal(ks[1], (1, S, dI))
+    Bm = jax.random.normal(ks[2], (1, S, 4))
+    Cm = jax.random.normal(ks[3], (1, S, 4))
+    A = -jnp.exp(jax.random.normal(ks[4], (dI, 4)) * 0.5)
+    h0 = jnp.zeros((1, dI, 4), jnp.float32)
+    y, h = mamba_scan_bd(dt, x, Bm, Cm, A, h0, chunk=8, bd=32, interpret=True)
+    y_ref, h_ref = ref.mamba_scan_ref(dt, x, Bm, Cm, A, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ops.py dispatch wrappers under forced interpret (the layer that had
+# zero CPU coverage). Shapes here are deliberately unique to this file —
+# see module docstring for the jit-cache hazard.
+# ---------------------------------------------------------------------------
+
+class TestDispatchWrappers:
+
+    @pytest.fixture(autouse=True)
+    def _force_interpret(self, monkeypatch):
+        monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+        assert kops.pallas_available()
+
+    def test_fused_normalize_wrapper(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(41, 13)), jnp.float32)
+        y, n1, mean1, m21 = kops.fused_normalize(
+            x, jnp.asarray(0.0), jnp.zeros(13), jnp.zeros(13))
+        yr, n1r, mean1r, m21r = ref.fused_normalize_ref(
+            x, 0.0, np.zeros(13, np.float32), np.zeros(13, np.float32))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-4)
+        assert float(n1) == 41.0
+
+    def test_hash_features_wrapper(self):
+        rng = np.random.default_rng(1)
+        ids = jnp.asarray(rng.integers(0, 99999, (29, 5)), jnp.int32)
+        vals = jnp.asarray(rng.normal(size=(29, 5)), jnp.float32)
+        out = kops.hash_features(ids, vals, dim=37)
+        want = ref.hash_features_ref(ids, vals, 37)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    def test_countmin_update_query_wrapper(self):
+        rng = np.random.default_rng(2)
+        ids = jnp.asarray(rng.integers(0, 5000, 311), jnp.int32)
+        seeds = jnp.asarray(rng.integers(1, 2**14, (2, 2)) * 2 + 1, jnp.int32)
+        table = jnp.zeros((2, 53), jnp.int32)
+        new_table, est = kops.countmin_update_query(ids, table, seeds)
+        want_table, want_est = ref.countmin_update_query_ref(ids, table, seeds)
+        np.testing.assert_array_equal(np.asarray(new_table),
+                                      np.asarray(want_table))
+        np.testing.assert_array_equal(np.asarray(est), np.asarray(want_est))
+
+    def test_ef_wrappers(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(173,)), jnp.float32)
+        res = jnp.zeros((173,), jnp.float32)
+        dec, rout = kops.ef_int8_roundtrip(res, x)
+        decr, routr = ref.ef_int8_roundtrip_ref(res, x)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(decr),
+                                   rtol=0, atol=1e-6)
+        dec, rout = kops.ef_topk_int8_roundtrip(res, x, k=17)
+        decr, routr = ref.ef_topk_int8_roundtrip_ref(res, x, 17)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(decr),
+                                   rtol=0, atol=1e-6)
+
+
+def test_pallas_available_tracks_env(monkeypatch):
+    monkeypatch.delenv("REPRO_FORCE_PALLAS_INTERPRET", raising=False)
+    monkeypatch.delenv("JAX_PALLAS_INTERPRET", raising=False)
+    on_tpu = jax.default_backend() == "tpu"
+    assert kops.pallas_available() == on_tpu
+    monkeypatch.setenv("JAX_PALLAS_INTERPRET", "1")
+    assert kops.pallas_available()
+    monkeypatch.delenv("JAX_PALLAS_INTERPRET")
+    monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+    assert kops.pallas_available()

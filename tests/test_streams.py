@@ -170,6 +170,54 @@ def test_countmin_streaming_estimates():
     assert (est - true).mean() < 40
 
 
+def test_countmin_edge_cloud_path_parity(monkeypatch):
+    """The sketch an edge node builds on the reference path and the one a
+    cloud/TPU node builds through the Pallas kernel must be the SAME
+    sketch — counts merge across tiers, so any divergence corrupts the
+    global summary. (Kernel path runs in interpret mode here.)"""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+    rng = np.random.default_rng(42)
+    ids = jnp.asarray(rng.integers(0, 3000, 901), jnp.int32)
+    cm0 = sk.countmin_init(depth=3, width=257, seed=5)
+    edge = sk.countmin_add(cm0, ids, use_kernel=False)
+    cloud = sk.countmin_add(cm0, ids, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(edge.table),
+                                  np.asarray(cloud.table))
+    edge_cm, edge_est = sk.countmin_add_query(cm0, ids, use_kernel=False)
+    cloud_cm, cloud_est = sk.countmin_add_query(cm0, ids, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(edge_cm.table),
+                                  np.asarray(cloud_cm.table))
+    np.testing.assert_array_equal(np.asarray(edge_est), np.asarray(cloud_est))
+
+
+def test_countmin_dispatch_is_recorded_and_loud(monkeypatch):
+    """Regression for the silent-fallback bug: a kernel request that
+    cannot run must (a) warn, (b) fall back correctly, and (c) be
+    visible in the dispatch counter — it used to vanish without trace."""
+    monkeypatch.delenv("REPRO_FORCE_PALLAS_INTERPRET", raising=False)
+    monkeypatch.delenv("JAX_PALLAS_INTERPRET", raising=False)
+    if jax.default_backend() == "tpu":
+        pytest.skip("fallback path requires a no-Pallas backend")
+    rng = np.random.default_rng(6)
+    ids = jnp.asarray(rng.integers(0, 500, 123), jnp.int32)
+    cm = sk.countmin_init(depth=2, width=64)
+    sk.reset_dispatch_counts()
+    sk.countmin_add(cm, ids)                       # auto -> reference on CPU
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        fell_back = sk.countmin_add(cm, ids, use_kernel=True)
+    np.testing.assert_array_equal(
+        np.asarray(fell_back.table),
+        np.asarray(sk.countmin_add(cm, ids, use_kernel=False).table))
+    counts = sk.dispatch_counts()
+    assert counts == {"pallas": 0, "reference": 3}
+    # and the kernel path is counted as pallas when it actually runs
+    monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+    sk.reset_dispatch_counts()
+    sk.countmin_add(cm, ids, use_kernel=True)
+    assert sk.dispatch_counts() == {"pallas": 1, "reference": 0}
+    sk.reset_dispatch_counts()
+
+
 # ---------------------------------------------------------------------------
 # Fusion
 # ---------------------------------------------------------------------------
