@@ -215,6 +215,119 @@ def bench_dag_place_multipool(rows, quick):
                  f"matches_oracle={agree}"))
 
 
+def _dp_synthetic_dag(n_ops, seed=7):
+    """Mostly-chain stream DAG with periodic diamonds and skip reads —
+    large enough that frontier enumeration is astronomically infeasible
+    while the frontier lattice stays non-trivial (ops near the tail are
+    edge-incapable, forcing real cut decisions)."""
+    from repro.core.costmodel import OperatorCost
+    from repro.core.pipeline import Op, OpGraph
+    rng = np.random.default_rng(seed)
+    ops = []
+    for j in range(n_ops):
+        if j == 0:
+            reads = ["src"]
+        elif j % 7 in (3, 4) and j >= 2:
+            reads = [f"k{j - 2}"]
+        else:
+            reads = [f"k{j - 1}"]
+            if j % 11 == 0 and j >= 2:
+                reads.append(f"k{j - 2}")
+        edge_ok = not (j >= 3 * n_ops // 4 and j % 5 == 0)
+        cost = OperatorCost(
+            name=f"op{j}",
+            flops_per_event=float(rng.integers(10**3, 10**7)),
+            bytes_per_event=float(rng.integers(64, 4096)),
+            out_bytes_per_event=float(rng.integers(16, 2048)),
+            edge_capable=edge_ok,
+        )
+        ops.append(Op(name=f"op{j}", fn=lambda s, b: (s, {}),
+                      init=lambda: {}, reads=reads, writes=[f"k{j}"],
+                      cost=cost))
+    return OpGraph(ops)
+
+
+def _dp_big_spec(n_edge, n_cloud, seed=7):
+    """Heterogeneous cluster: varied edge boxes, 4/8-chip pods, a sparse
+    random mesh of declared edge->pod uplinks (some codec-carrying)."""
+    from repro.core.costmodel import ClusterSpec, Link, Resource
+    rng = np.random.default_rng(seed)
+    pools = {}
+    for i in range(n_edge):
+        pools[f"edge{i}"] = Resource(
+            f"edge{i}", "edge", chips=1,
+            flops=float(rng.choice([1e12, 2e12, 4e12])),
+            mem_bw=float(rng.choice([2e11, 4e11])),
+            mem_cap=8e9, net_bw=float(rng.choice([5e8, 1e9])),
+            energy_w=float(rng.choice([15.0, 30.0, 45.0])))
+    for i in range(n_cloud):
+        pools[f"pod{i}"] = Resource(
+            f"pod{i}", "cloud", chips=int(rng.choice([4, 8])),
+            flops=5e12, mem_bw=8e11, mem_cap=64e9, net_bw=1e10,
+            energy_w=float(rng.choice([300.0, 500.0])))
+    links = []
+    for i in range(n_edge):
+        for k in range(n_cloud):
+            if rng.random() < 0.25:
+                links.append(Link(
+                    f"edge{i}", f"pod{k}",
+                    bw=float(rng.choice([1e8, 2e8, 5e8])),
+                    latency=float(rng.choice([0.02, 0.03, 0.05])),
+                    codec="int8_ef" if rng.random() < 0.3 else "identity"))
+    return ClusterSpec(pools, links=links)
+
+
+def bench_dag_place_dp(rows, quick):
+    """Polynomial-time DP placement (ROADMAP item 5). Row 1 is the CI
+    tripwire: the DP must return the SAME score as the frontier
+    enumeration on the multi-pool fanout graph. Row 2 places a 100-op
+    synthetic DAG across a 24-pool cluster — a search space (~24^100
+    assignments) no enumeration could ever touch — and reports the
+    label-DP effort stats."""
+    from repro.core import costmodel as cm
+    from repro.core.pipeline import fanout_stream_graph
+    from repro.core.placement import (Objective, place_frontier,
+                                      place_frontier_dp)
+    obj = Objective()
+    # row 1: DP vs enumeration on the bench_dag_place_multipool topology
+    edge_b = cm.Resource("edge_b", "edge", chips=1, flops=1e12, mem_bw=40e9,
+                         mem_cap=2e9, net_bw=0.5e9, net_latency=35e-3,
+                         energy_w=10.0)
+    cloud_b = cm.Resource("cloud_b", "cloud", chips=64, net_latency=0.5e-3,
+                          energy_w=220.0)
+    spec = cm.ClusterSpec(
+        pools=[cm.EDGE_NODE, edge_b, cm.CLOUD_POD, cloud_b],
+        links=[cm.Link("edge", "cloud", bw=1e9, latency=20e-3,
+                       codec="int8_ef"),
+               cm.Link("edge_b", "cloud_b", bw=0.5e9, latency=40e-3,
+                       codec="topk_int8_ef"),
+               cm.Link("edge", "edge_b", bw=2e9, latency=5e-3)])
+    g = fanout_stream_graph(dim=16)
+    iters = 2 if quick else 5
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        plan_dp, frontier_dp = place_frontier_dp(g, spec, 1e4, obj)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    plan_en, _ = place_frontier(g, spec, 1e4, obj, method="enumerate")
+    parity = obj.score(plan_dp) <= obj.score(plan_en) * 1.0001
+    rows.append(("dag_place_dp_parity", us,
+                 f"{len(spec)} pools, edge={len(frontier_dp)}/"
+                 f"{len(g.names)} ops, matches_enumeration={parity}"))
+    # row 2: the headline scale point — 100 ops x 24 pools
+    g_big = _dp_synthetic_dag(100)
+    spec_big = _dp_big_spec(8, 16)
+    stats = {}
+    t0 = time.perf_counter()
+    plan, frontier = place_frontier_dp(g_big, spec_big, 1e5, obj,
+                                       max_labels=256, stats=stats)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("dag_place_dp_100ops", us,
+                 f"{len(spec_big)} pools, edge={len(frontier)}/100 ops, "
+                 f"score={obj.score(plan):.5f}, "
+                 f"labels={stats.get('labels_expanded', 0)}, "
+                 f"truncated={stats.get('truncated')}"))
+
+
 def bench_adaptive_codec_replan(rows, quick):
     """Rate-adaptive codec control: one replan over the enlarged
     (frontier x pool x codec) search — plans/sec so CI catches a
@@ -476,6 +589,7 @@ ALL_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                bench_s3_offload, bench_pipeline_partition,
                bench_pipeline_fuse_xla,
                bench_dag_placement, bench_dag_place_multipool,
+               bench_dag_place_dp,
                bench_adaptive_codec_replan, bench_uplink_codec,
                bench_fusion_join,
                bench_s4_feature_matrix, bench_generators, bench_sketches,
@@ -489,6 +603,7 @@ SMOKE_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                  bench_s3_offload, bench_pipeline_partition,
                  bench_pipeline_fuse_xla,
                  bench_dag_placement, bench_dag_place_multipool,
+                 bench_dag_place_dp,
                  bench_adaptive_codec_replan, bench_uplink_codec,
                  bench_fusion_join,
                  bench_s4_feature_matrix, bench_generators, bench_sketches,

@@ -221,6 +221,19 @@ def transfer_time(bytes_per_event: float, rate: float, res: Resource) -> float:
     return bytes_per_event * rate / res.net_bw
 
 
+def op_placement_terms(op: OperatorCost, res: Resource, rate: float
+                       ) -> Tuple[float, float, float]:
+    """The per-(op, pool) scalars every placement evaluation accumulates:
+    ``(utilization, node compute latency, energy watts)``. Shared by
+    :func:`evaluate_graph_plan` and the placement DP
+    (:func:`repro.core.placement.place_frontier_dp`) so the two paths
+    price an op on a pool with bit-identical arithmetic — the DP's
+    incremental bookkeeping must reproduce the evaluator's numbers, not
+    merely approximate them."""
+    u = stage_time(op, res, rate)
+    return u, op.flops_per_event / res.total_flops, u * res.energy_w * res.chips
+
+
 @dataclass
 class PipelinePlan:
     """Assignment of each stage to a resource + derived metrics."""
@@ -361,10 +374,10 @@ def evaluate_graph_plan(ops: List[OperatorCost],
         if not op.edge_capable and res.kind == "edge":
             plan.feasible = False
             plan.notes.append(f"{op.name} not edge-capable")
-        u = stage_time(op, res, rate)
+        u, lat, e = op_placement_terms(op, res, rate)
         per_res_util[rname] = per_res_util.get(rname, 0.0) + u
-        node_lat[op.name] = op.flops_per_event / res.total_flops
-        energy += u * res.energy_w * res.chips
+        node_lat[op.name] = lat
+        energy += e
         if op.state_bytes > res.mem_cap * res.chips:
             plan.feasible = False
             plan.notes.append(f"{op.name} state exceeds {rname} memory")

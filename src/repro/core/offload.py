@@ -74,6 +74,12 @@ class OffloadController:
     headroom: float = 1.3      # replan when rate moves x1.3 outside band
     cooldown: int = 5          # min decisions between migrations
     codec_cooldown: int = 10   # min decisions between codec swaps
+    # placement engine for DAG replans ("auto" | "enumerate" | "dp").
+    # The controller replans inside the control loop, so it defaults to
+    # the polynomial DP — cost-identical to the enumeration with the
+    # same canonical tie-break, but it stays fast when the graph or the
+    # ClusterSpec grows past toy sizes.
+    placement_method: str = "dp"
     planned_rate: float = 0.0
     cut: int = 0
     frontier: FrozenSet[str] = frozenset()
@@ -114,7 +120,8 @@ class OffloadController:
         codecs = list(codecs) if codecs else [self.codec]
         if self.graph is not None:
             plan, _ = place_frontier(self.graph, self.resources, rate,
-                                     self.objective, codecs=codecs)
+                                     self.objective, codecs=codecs,
+                                     method=self.placement_method)
         else:
             plan = None
             best_score = float("inf")

@@ -76,6 +76,10 @@ class StreamJob:
     # user-supplied operator graph (linear Pipeline or fan-out OpGraph);
     # None -> the standard S2CE chain
     pipeline: Optional[OpGraph] = None
+    # measure per-op costs from a dry-run compile of the first batch
+    # (selftune.measure_operator_costs) and optimize placement against
+    # the measurement instead of the declared OperatorCost guesses
+    measured_costs: bool = False
     # elastic cloud-pool sizing (dist/elastic): starting worker count and cap
     workers: int = 1
     max_workers: int = 16
@@ -248,6 +252,36 @@ class Orchestrator:
             f"{step}:elastic-{plan.action} workers={plan.workers} "
             f"mesh={tuple(mesh.devices.shape)} ({plan.reason})")
 
+    def _measure_costs(self, batches):
+        """Close the self-tuning loop (ROADMAP item 5): peek the first
+        batch, dry-run-measure every op's cost at its true input
+        signature (:func:`repro.core.selftune.measure_operator_costs`),
+        and install the measurements on the pipeline and controller so
+        the INITIAL plan — and every replan after it — optimizes against
+        what the compiler actually emits, not the hand-written guesses.
+        Returns the stream with the peeked batch put back in front."""
+        import itertools
+
+        from repro.core import selftune
+        it = iter(batches)
+        try:
+            first = next(it)
+        except StopIteration:
+            return iter(())
+        bd = {k: jnp.asarray(v) for k, v in first.data.items()}
+        # the dry-run sees the same batch signature run() feeds,
+        # including the per-step rng key (any key: it prices, not learns)
+        bd.setdefault("rng", jax.random.PRNGKey(0))
+        measured, notes = selftune.measure_operator_costs(self.pipeline, bd)
+        if measured:
+            self.pipeline.set_measured_costs(measured)
+            self.ops = self.pipeline.costs()
+            self.controller.ops = self.ops
+        self.metrics.decisions.append(
+            f"0:measured-costs {len(measured)}/{len(self.pipeline.ops)} ops"
+            + (f" ({len(notes)} kept declared)" if notes else ""))
+        return itertools.chain([first], it)
+
     # -- main loop ----------------------------------------------------------
     def run(self, batches, rate_fn: Optional[Callable[[int], float]] = None,
             seed: int = 0, fixed_cut: Optional[int] = None,
@@ -258,6 +292,8 @@ class Orchestrator:
         offload controller's plan drives which segment each op executes
         in, re-partitioning on migration."""
         root_rng = jax.random.PRNGKey(seed)
+        if self.job.measured_costs:
+            batches = self._measure_costs(batches)
         dec = self.controller.initial_plan(rate_fn(0) if rate_fn else 1e4)
         if fixed_frontier is not None:
             self.frontier = self.pipeline.check_frontier(fixed_frontier)

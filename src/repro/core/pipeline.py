@@ -42,7 +42,7 @@ the learner tolerates ulp-level perturbation.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import (Any, Callable, Dict, FrozenSet, Iterable, Iterator, List,
                     Optional, Sequence, Tuple)
 
@@ -131,6 +131,9 @@ class OpGraph:
         self._op_fns: Dict[int, Callable] = {}       # op idx -> jitted step
         self.compiles = 0          # cache misses (segment re-fusions)
         self.cache_hits = 0
+        # measured per-op costs (core/selftune.measure_operator_costs)
+        # overriding the declared OperatorCost guesses in costs()
+        self._cost_overrides: Dict[str, OperatorCost] = {}
         self._build_deps()
 
     # -- dependency inference ----------------------------------------------
@@ -181,6 +184,7 @@ class OpGraph:
                 readers[k] = set()
         self._parents: Tuple[FrozenSet[int], ...] = tuple(
             frozenset(p) for p in parents)
+        self._flow_pairs: Tuple[Tuple[int, int], ...] = tuple(sorted(flow))
         self.flow_edges: Tuple[Tuple[str, str], ...] = tuple(sorted(
             (self.ops[i].name, self.ops[j].name) for i, j in flow))
         self.source_reads = tuple(source_reads)
@@ -193,16 +197,71 @@ class OpGraph:
         ``ops[0].bytes_per_event`` — the linear model's charge)."""
         if not self.source_consumers:
             return 0.0
-        return self.op(self.source_consumers[0]).cost.bytes_per_event
+        return self.cost_of(self.source_consumers[0]).bytes_per_event
 
     # -- IR views ----------------------------------------------------------
     @property
     def names(self) -> List[str]:
         return [op.name for op in self.ops]
 
+    @property
+    def hazard_parent_indices(self) -> Tuple[FrozenSet[int], ...]:
+        """Per-op index sets of ALL dependency parents (true flow deps
+        plus write-after-read/write hazards) — the closure relation
+        :meth:`frontiers` enumerates downward-closed sets under. The
+        placement DP enforces exactly this relation, so every frontier
+        it returns is executable (``check_frontier`` accepts it)."""
+        return self._parents
+
+    @property
+    def flow_pairs(self) -> Tuple[Tuple[int, int], ...]:
+        """The true-dependency edges as (producer idx, consumer idx)
+        pairs — the index view of :attr:`flow_edges` (the edges the cost
+        model prices bytes on)."""
+        return self._flow_pairs
+
+    def count_frontiers(self, limit: Optional[int] = None) -> int:
+        """Number of downward-closed frontiers, enumerated lazily and
+        capped at ``limit`` (the dispatch heuristic in
+        ``placement.place_frontier`` needs "more than N?", never the
+        exact — potentially exponential — count)."""
+        n = 0
+        for _ in self.frontiers():
+            n += 1
+            if limit is not None and n >= limit:
+                break
+        return n
+
     def costs(self) -> List[OperatorCost]:
-        """The cost-model view — what placement/offload optimize over."""
-        return [op.cost for op in self.ops]
+        """The cost-model view — what placement/offload optimize over.
+        Measured overrides (:meth:`set_measured_costs`) win over the
+        declared per-op guesses."""
+        return [self._cost_overrides.get(op.name, op.cost)
+                for op in self.ops]
+
+    def cost_of(self, name: str) -> OperatorCost:
+        return self._cost_overrides.get(name) or self.op(name).cost
+
+    def set_measured_costs(
+            self, costs: Optional[Dict[str, OperatorCost]]) -> None:
+        """Install measured per-op costs (from
+        :func:`repro.core.selftune.measure_operator_costs`) so placement
+        optimizes against measurement instead of the hand-written
+        declarations. ``None`` clears back to the declared costs.
+
+        Edge-capability is a *semantic* declaration (model management
+        must stay in the cloud), not something a dry-run can measure, so
+        the declared flag always survives the override."""
+        if costs is None:
+            self._cost_overrides = {}
+            return
+        unknown = sorted(set(costs) - set(self.names))
+        if unknown:
+            raise ValueError(f"measured costs name unknown ops: {unknown}")
+        self._cost_overrides = {
+            name: replace(c, name=name,
+                          edge_capable=self.op(name).cost.edge_capable)
+            for name, c in costs.items()}
 
     def init_states(self) -> Dict[str, Any]:
         return {op.name: op.init() for op in self.ops}
@@ -392,6 +451,7 @@ class Pipeline(OpGraph):
         n = len(self.ops)
         self._parents = tuple(frozenset(() if i == 0 else (i - 1,))
                               for i in range(n))
+        self._flow_pairs = tuple((i, i + 1) for i in range(n - 1))
         self.flow_edges = tuple((self.ops[i].name, self.ops[i + 1].name)
                                 for i in range(n - 1))
         self.source_reads = ()
@@ -399,7 +459,7 @@ class Pipeline(OpGraph):
 
     @property
     def source_bytes_per_event(self) -> float:
-        return self.ops[0].cost.bytes_per_event
+        return self.cost_of(self.ops[0].name).bytes_per_event
 
     @property
     def n_cuts(self) -> int:

@@ -15,8 +15,111 @@ import itertools
 import json
 import pathlib
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Tuple
+
+
+def _n_events(batch: Dict[str, Any]) -> int:
+    """Events in a batch dict: the largest leading dimension over its
+    array values (the ``rng`` key is control, not payload)."""
+    import jax.numpy as jnp
+    n = 0
+    for k, v in batch.items():
+        if k == "rng":
+            continue
+        shape = jnp.shape(v)
+        if shape and shape[0] > n:
+            n = int(shape[0])
+    return max(n, 1)
+
+
+def _pytree_nbytes(tree: Any) -> float:
+    import jax
+    return float(sum(
+        getattr(leaf, "nbytes", 0) for leaf in jax.tree_util.tree_leaves(tree)
+        if hasattr(leaf, "nbytes")))
+
+
+def measure_operator_costs(graph, batch: Dict[str, Any], *,
+                           events: Optional[int] = None
+                           ) -> Tuple[Dict[str, "Any"], List[str]]:
+    """Measured per-op :class:`~repro.core.costmodel.OperatorCost`s from
+    one dry-run of ``graph`` over ``batch`` — the self-tuning closure of
+    the placement loop (ROADMAP item 5): instead of optimizing the
+    hand-written per-op guesses, the placement search prices what the
+    compiler actually emits.
+
+    Per op, in graph order (so each op sees the channel env its real
+    parents produced):
+
+      * ``flops_per_event`` / ``bytes_per_event`` — compile the op's
+        step at its true input signature and divide the compiled
+        artifact's cost analysis by the event count
+        (:func:`repro.launch.roofline.op_event_costs`);
+      * ``out_bytes_per_event`` — execute the op and count the bytes it
+        actually writes to its output channels;
+      * ``state_bytes`` — the bytes of its post-step state pytree;
+      * ``edge_capable`` — NOT measured; the declared semantic flag is
+        preserved by :meth:`OpGraph.set_measured_costs`.
+
+    Returns ``(measured, notes)``: a name -> OperatorCost dict holding
+    every op whose measurement succeeded, plus human-readable notes for
+    ops that kept their declared numbers (analysis can fail per-op —
+    e.g. a backend without cost analysis — without poisoning the rest).
+
+    The measurement reuses the ops' pure step fns directly (fresh jit,
+    not the graph's cached executables), so it never perturbs a running
+    pipeline's compile cache or state.
+    """
+    import jax
+
+    from repro.launch import roofline
+
+    states = graph.init_states()
+    env = dict(batch)
+    n_ev = int(events) if events else _n_events(batch)
+    measured: Dict[str, Any] = {}
+    notes: List[str] = []
+    for i, op in enumerate(graph.ops):
+        declared = op.cost
+        # channel-restricted input for OpGraph ops; a linear Pipeline op
+        # (undeclared channels) sees the full batch, exactly as _apply
+        # feeds it
+        inb = (dict(env) if op.reads is None
+               else {k: env[k] for k in op.reads if k in env})
+        try:
+            compiled = jax.jit(op.fn).lower(states[op.name], inb).compile()
+            flops_ev, bytes_ev = roofline.op_event_costs(compiled, n_ev)
+        except Exception as e:  # pragma: no cover - backend specific
+            notes.append(f"{op.name}: kept declared cost "
+                         f"({type(e).__name__}: {e})")
+            flops_ev = None
+        try:
+            states, env = graph._apply(i, states, env, call=op.fn)
+        except Exception as e:
+            # the op cannot even execute on this batch — downstream ops
+            # would see a wrong env, so stop measuring here and keep the
+            # declared costs for the rest of the graph
+            notes.append(f"{op.name}: execution failed, measurement "
+                         f"aborted ({type(e).__name__}: {e})")
+            break
+        if flops_ev is None:
+            continue
+        if op.writes is None:
+            # linear chain: the op forwards the whole batch downstream
+            out_nbytes = _pytree_nbytes(
+                {k: v for k, v in env.items() if k != "rng"})
+        else:
+            out_nbytes = sum(_pytree_nbytes(env[k]) for k in op.writes
+                             if k in env)
+        measured[op.name] = replace(
+            declared,
+            flops_per_event=flops_ev,
+            bytes_per_event=bytes_ev,
+            out_bytes_per_event=out_nbytes / n_ev,
+            state_bytes=_pytree_nbytes(states[op.name]),
+        )
+    return measured, notes
 
 
 @dataclass

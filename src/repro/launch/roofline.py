@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 PEAK_FLOPS = 197e12        # bf16 / chip
 HBM_BW = 819e9             # bytes/s / chip
@@ -128,6 +128,37 @@ class Roofline:
             "useful_flops_ratio": self.useful_flops_ratio,
             "roofline_fraction": self.roofline_fraction,
         }
+
+
+def op_event_costs(compiled, n_events: int) -> Tuple[float, float]:
+    """Per-event ``(flops, hbm_bytes)`` of one compiled pipeline-op step
+    — the measured replacements for the hand-written
+    ``OperatorCost.flops_per_event`` / ``bytes_per_event`` guesses
+    (:func:`repro.core.selftune.measure_operator_costs` divides a whole
+    compiled batch step by its event count).
+
+    Primary source is the backend's ``cost_analysis()``; when a backend
+    reports nothing (or zeros) for a term, that term falls back to the
+    scan-aware HLO parse in :mod:`repro.launch.hlo_analysis` — the same
+    numbers the dry-run roofline uses."""
+    flops = hbm = 0.0
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        flops = float(ca.get("flops", 0.0) or 0.0)
+        hbm = float(ca.get("bytes accessed", 0.0) or 0.0)
+    except Exception:
+        pass
+    if flops <= 0.0 or hbm <= 0.0:
+        from repro.launch import hlo_analysis as ha
+        t = ha.analyze(compiled.as_text())
+        if flops <= 0.0:
+            flops = float(t["flops"])
+        if hbm <= 0.0:
+            hbm = float(t["hbm_bytes"])
+    n = max(int(n_events), 1)
+    return flops / n, hbm / n
 
 
 def model_flops(cfg, shape) -> float:

@@ -282,6 +282,48 @@ def test_multipool_frontier_search_matches_oracle_on_random_dags(case, codec):
         n for n, r in best.assignment.items() if r in edge_pools)
 
 
+@settings(max_examples=40, deadline=None, database=None)
+@given(case=_random_dag())
+def test_dp_placement_matches_oracle_on_random_dags(case):
+    """The polynomial label DP must equal the exhaustive all-assignments
+    oracle on random small DAGs — same invariant the enumeration engine
+    carries, now for the engine real problem sizes run on."""
+    from repro.core.placement import place_frontier_dp
+    graph, rate = case
+    obj = Objective()
+    res = {"edge": EDGE_NODE, "cloud": CLOUD_POD}
+    best, frontier = place_frontier_dp(graph, res, rate, obj)
+    oracle = place_graph_exhaustive(graph, res, rate, obj)
+    assert obj.score(best) <= obj.score(oracle) * 1.0001, (
+        f"DP lost to the oracle: frontier={sorted(frontier)} "
+        f"score={obj.score(best)} oracle={obj.score(oracle)} "
+        f"oracle_assign={oracle.assignment}")
+
+
+@settings(max_examples=30, deadline=None, database=None)
+@given(case=_random_dag(),
+       codec=st.sampled_from(["identity", "int8_ef", "topk_int8_ef"]))
+def test_dp_multipool_codec_ladder_matches_enumeration(case, codec):
+    """Multi-pool + codec-candidate generalization: the DP must return
+    the exact plan (assignment, frontier, codec) the enumeration engine
+    returns — not just the score — so the two engines are
+    interchangeable inside the offload controller."""
+    from repro.core.placement import place_frontier_dp
+    graph, rate = case
+    obj = Objective()
+    spec = _multipool_spec(codec)
+    codecs = ["topk_int8_ef", codec, "identity"]
+    best_dp, frontier_dp = place_frontier_dp(graph, spec, rate, obj,
+                                             codecs=codecs)
+    best_en, frontier_en = place_frontier(graph, spec, rate, obj,
+                                          codecs=codecs, method="enumerate")
+    assert best_dp.assignment == best_en.assignment, (
+        f"DP/enumeration diverged: dp={best_dp.assignment} "
+        f"en={best_en.assignment}")
+    assert frontier_dp == frontier_en
+    assert best_dp.uplink_codec == best_en.uplink_codec
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(0, 100))
 def test_moments_min_max_invariants(seed):
