@@ -569,6 +569,82 @@ def bench_serve_micro(rows, quick):
                  f"{th['decode_tok_per_s']:.0f} decode tok/s"))
 
 
+def bench_fleet(rows, quick):
+    """Multi-tenant fleet control path (core/fleet): admission probes
+    per second, one fleet-batched arbitration pass over triggered
+    tenants, and a full 3-tenant orchestrated round (execute + arbitrate
+    + apply) — the fleet layer's overhead on top of single-job control
+    must stay bounded as tenants multiply."""
+    from repro.core import costmodel as cm
+    from repro.core.fleet import FleetOrchestrator, FleetScheduler, TenantSpec
+    from repro.core.offload import OffloadController
+    from repro.core.orchestrator import StreamJob
+    from repro.core.pipeline import standard_stream_pipeline
+    from repro.core.sla import SLA, pick_codec
+    from repro.streams.generators import HyperplaneStream
+    sla = SLA(max_latency_s=1e3, error_budget=11.0)
+    spec = cm.ClusterSpec(pools=[cm.EDGE_NODE, cm.CLOUD_POD])
+
+    def controller(cool=5):
+        return OffloadController(
+            standard_stream_pipeline(dim=8).costs(), spec,
+            codec=pick_codec(sla).name, sla_spec=sla, cooldown=cool)
+
+    # admission: probe + initial plan + ledger booking, per tenant
+    n_admit = 4 if quick else 8
+    t0 = time.perf_counter()
+    sched = FleetScheduler(spec)
+    for i in range(n_admit):
+        r = sched.submit(TenantSpec(f"t{i}", sla=sla, demand_rate=1e4),
+                         controller())
+    us = (time.perf_counter() - t0) / n_admit * 1e6
+    rows.append(("fleet_admit", us,
+                 f"{len(sched.admitted)}/{n_admit} admitted, "
+                 f"{1e6 / us:.0f} admissions/s"))
+
+    # arbitration: every tenant triggers -> one batched pass replans all
+    # in priority order against residual capacity
+    sched2 = FleetScheduler(spec)
+    for i in range(n_admit):
+        sched2.submit(TenantSpec(f"t{i}", sla=sla, demand_rate=1e4,
+                                 priority=i % 3), controller(cool=0))
+    iters = 3 if quick else 6
+    t0 = time.perf_counter()
+    for step in range(1, iters + 1):
+        rate = 5e4 if step % 2 else 1e4      # out-of-band every step
+        sched2.arbitrate(step, {f"t{i}": rate for i in range(n_admit)})
+    us = (time.perf_counter() - t0) / iters * 1e6
+    grants = sum(1 for line in sched2.log if "grant" in line)
+    rows.append(("fleet_arbitrate_replan", us,
+                 f"{n_admit} tenants/pass, {grants} grants over "
+                 f"{iters} passes, ledger ok={not sched2.ledger.check()}"))
+
+    # full fleet round: 3 tenant jobs execute + one arbitration + apply
+    fleet = FleetOrchestrator(spec)
+    gens = {}
+    for i in range(3):
+        fleet.add_tenant(TenantSpec(f"job{i}", sla=sla, demand_rate=1e4),
+                         StreamJob(f"job{i}", dim=8, sla=sla), seed=i)
+        gens[f"job{i}"] = HyperplaneStream(dim=8, seed=10 + i, horizon=1e6)
+    n_rounds = 3 if quick else 6
+    step = [0]
+
+    def round_():
+        s = step[0]
+        fleet.step_round({n: g.batch(s, 32) for n, g in gens.items()})
+        step[0] += 1
+
+    round_()                                  # compile warmup
+    t0 = time.perf_counter()
+    for _ in range(n_rounds):
+        round_()
+    us = (time.perf_counter() - t0) / n_rounds * 1e6
+    ev = sum(m.events for m in fleet.finish().values())
+    rows.append(("fleet_step_3tenants", us,
+                 f"{ev} events, {3 * 32 / (us * 1e-6):.0f} ev/s fleet-wide, "
+                 f"ledger ok={not fleet.scheduler.ledger.check()}"))
+
+
 def bench_roofline_summary(rows, quick):
     """Surface the dry-run roofline verdicts (if the sweep has run)."""
     try:
@@ -591,7 +667,7 @@ ALL_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                bench_dag_placement, bench_dag_place_multipool,
                bench_dag_place_dp,
                bench_adaptive_codec_replan, bench_uplink_codec,
-               bench_fusion_join,
+               bench_fusion_join, bench_fleet,
                bench_s4_feature_matrix, bench_generators, bench_sketches,
                bench_kernel_dispatch,
                bench_train_micro, bench_serve_micro, bench_roofline_summary]
@@ -605,7 +681,7 @@ SMOKE_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                  bench_dag_placement, bench_dag_place_multipool,
                  bench_dag_place_dp,
                  bench_adaptive_codec_replan, bench_uplink_codec,
-                 bench_fusion_join,
+                 bench_fusion_join, bench_fleet,
                  bench_s4_feature_matrix, bench_generators, bench_sketches,
                  bench_kernel_dispatch]
 

@@ -17,3 +17,19 @@ if "xla_force_host_platform_device_count" not in _cur:
 _SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+import pytest  # noqa: E402  (after the XLA/env bootstrap above)
+
+
+@pytest.fixture(autouse=True)
+def _reset_kernel_dispatch_counts():
+    """Test isolation for the module-level kernel-dispatch counters in
+    ``repro.streams.sketches``: they accumulate across tests, so any
+    assertion on ``dispatch_counts()`` was order-dependent (passing
+    alone, failing after another test had already dispatched). Reset
+    before every test; import lazily so tests that never touch the
+    streams package don't pay for (or trigger) the jax import."""
+    sk = sys.modules.get("repro.streams.sketches")
+    if sk is not None:
+        sk.reset_dispatch_counts()
+    yield

@@ -58,12 +58,19 @@ class Link:
     compresses every byte shipped over this link — plans price crossings
     at ``codec.wire_bytes(payload)`` and the orchestrator applies the
     same codec to tensors that actually cross at runtime.
+
+    ``energy_per_byte`` (joules per *wire* byte; radio/NIC transmit
+    energy) is priced into the plan's energy aggregate: every crossing
+    adds ``wire_bytes * rate * energy_per_byte`` watts, so placement can
+    trade latency against uplink energy. The default 0.0 is bitwise
+    neutral — links that don't declare it price exactly as before.
     """
     src: str
     dst: str
     bw: float                  # bytes/s
     latency: float             # seconds per message
     codec: str = "identity"
+    energy_per_byte: float = 0.0   # J per wire byte (0.0 = unpriced)
 
     def wire_bytes(self, raw_bytes: float) -> float:
         from repro.core.codecs import get_codec
@@ -189,6 +196,73 @@ class ClusterSpec(Mapping):
                     links[(e.name, c.name)] = replace(ln, codec=codec)
         return ClusterSpec(self.pools, links.values())
 
+    def residual(self,
+                 pool_load: Optional[Mapping] = None,
+                 link_load: Optional[Mapping] = None,
+                 pool_state_bytes: Optional[Mapping] = None
+                 ) -> "ClusterSpec":
+        """A derived spec pricing a tenant against **residual** capacity
+        — the heart of multi-tenant fleet scheduling (core/fleet): other
+        tenants' reservations shrink what this tenant's placement search
+        may assume, so ``evaluate_graph_plan`` on the residual spec
+        prices against what is actually left, not the whole cluster.
+
+        * ``pool_load``: ``{pool: fraction}`` of each pool's original
+          compute/memory bandwidth already reserved. The pool's per-chip
+          ``flops`` and ``mem_bw`` scale by ``1 - fraction`` — a tenant
+          sharing a pool gets a proportional slice, so its utilization,
+          compute latency, and energy all price at the fair-share rate,
+          and ``utilization > 1`` on the residual pool is exactly
+          "does not fit in what is left".
+        * ``link_load``: ``{(src, dst): bytes_per_second}`` of wire
+          bandwidth already reserved per directed link. The link's ``bw``
+          drops by that amount (undeclared pairs are materialized from
+          the derived defaults first), so link feasibility on the
+          residual spec encodes the shared-capacity split.
+        * ``pool_state_bytes``: ``{pool: bytes}`` of resident state
+          other tenants hold on the pool; shrinks ``mem_cap``.
+
+        Zero/absent loads return the pool and link objects *unchanged*
+        (not merely equal), so a fleet of one tenant prices bitwise
+        identically to the standalone spec.
+        """
+        pool_load = dict(pool_load or {})
+        link_load = dict(link_load or {})
+        state = dict(pool_state_bytes or {})
+        for name in (*pool_load, *state):
+            if name not in self.pools:
+                raise ValueError(f"residual: unknown pool {name!r}")
+        pools: Dict[str, Resource] = {}
+        for name, r in self.pools.items():
+            f = pool_load.get(name, 0.0)
+            sb = state.get(name, 0.0)
+            if f < -1e-9 or f > 1.0 + 1e-9:
+                raise ValueError(
+                    f"residual: pool {name!r} load {f:.4g} not in [0, 1]")
+            if f <= 0.0 and sb <= 0.0:
+                pools[name] = r
+                continue
+            # a fully-reserved pool keeps an epsilon share: placement
+            # then prices any op there as over-capacity (infeasible)
+            # instead of dividing by zero
+            share = max(1.0 - f, 1e-9)
+            pools[name] = replace(
+                r, flops=r.flops * share, mem_bw=r.mem_bw * share,
+                mem_cap=max(r.mem_cap - sb / max(r.chips, 1), 0.0))
+        links: Dict[Tuple[str, str], Link] = dict(self._links)
+        for key in link_load:
+            src, dst = key
+            if src not in self.pools or dst not in self.pools:
+                raise ValueError(f"residual: unknown link {src}->{dst}")
+            if key not in links:
+                links[key] = self.link(src, dst)
+        out = []
+        for key, ln in links.items():
+            b = link_load.get(key, 0.0)
+            out.append(replace(ln, bw=max(ln.bw - b, 1e-9)) if b > 0.0
+                       else ln)
+        return ClusterSpec(pools, out)
+
     def __repr__(self) -> str:
         pools = ", ".join(f"{n}:{r.kind}" for n, r in self.pools.items())
         return (f"ClusterSpec({pools}; "
@@ -288,9 +362,11 @@ def evaluate_plan(ops: List[OperatorCost], assign: Dict[str, str],
         energy += u * res.energy_w * res.chips
         if prev is not None and prev != rname:
             ln = spec.link(prev, rname)
+            wire = ln.wire_bytes(in_bytes)
             link_bytes[(prev, rname)] = (link_bytes.get((prev, rname), 0.0)
-                                         + ln.wire_bytes(in_bytes))
+                                         + wire)
             latency += ln.latency
+            energy += wire * rate * ln.energy_per_byte
         in_bytes = op.out_bytes_per_event
         prev = rname
         if op.state_bytes > res.mem_cap * res.chips:
@@ -386,9 +462,11 @@ def evaluate_graph_plan(ops: List[OperatorCost],
     link_bytes: Dict[Tuple[str, str], float] = {}
 
     def ship(src: str, dst: str, raw_bytes: float):
+        nonlocal energy
         ln = spec.link(src, dst)
-        link_bytes[(src, dst)] = (link_bytes.get((src, dst), 0.0)
-                                  + ln.wire_bytes(raw_bytes))
+        wire = ln.wire_bytes(raw_bytes)
+        link_bytes[(src, dst)] = link_bytes.get((src, dst), 0.0) + wire
+        energy += wire * rate * ln.energy_per_byte
 
     source_hop: Dict[str, float] = {}    # consumer pool -> entry latency
     if source:

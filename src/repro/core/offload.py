@@ -89,8 +89,7 @@ class OffloadController:
     history: List[OffloadDecision] = field(default_factory=list)
 
     def __post_init__(self):
-        self.resources = ClusterSpec.of(self.resources)
-        self._edge_pools = {r.name for r in self.resources.edge_pools}
+        self.set_resources(self.resources)
         if self.codec_candidates is None:
             if self.sla_spec is not None:
                 self.codec_candidates = [
@@ -99,6 +98,16 @@ class OffloadController:
                 self.codec_candidates = [self.codec]
         if self.codec not in self.codec_candidates:
             self.codec_candidates = [self.codec, *self.codec_candidates]
+
+    def set_resources(self, resources: ResourcesLike) -> None:
+        """Swap the topology replans run over. The fleet scheduler calls
+        this with a *residual* :class:`ClusterSpec` (the shared cluster
+        minus other tenants' reservations) before every fleet-arbitrated
+        replan, so a tenant controller prices exactly what is left for
+        it. Pool names/kinds must be stable across swaps — a residual
+        spec derived from the same cluster always is."""
+        self.resources = ClusterSpec.of(resources)
+        self._edge_pools = {r.name for r in self.resources.edge_pools}
 
     @property
     def _adaptive(self) -> bool:
@@ -133,6 +142,15 @@ class OffloadController:
                 if plan is None or s < best_score:
                     plan, best_score = cand, s
         return plan, self._frontier_of(plan.assignment)
+
+    def probe_plan(self, rate: float):
+        """Side-effect-free placement probe: the plan :meth:`initial_plan`
+        at ``rate`` WOULD take over the current resources, without
+        touching controller state. The fleet scheduler's admission check
+        prices a candidate tenant through this (after
+        :meth:`set_resources` with the residual spec) and only commits
+        via :meth:`initial_plan` when the probe meets the SLA."""
+        return self._plan(rate)
 
     def _replan_codecs(self, rate: float, sla: Optional[SLATracker]):
         """A replan with codec re-admission. The saturation signal is
@@ -185,26 +203,47 @@ class OffloadController:
         self.history.append(d)
         return d
 
-    def observe(self, step: int, rate: float,
-                sla: Optional[SLATracker] = None) -> OffloadDecision:
-        """Called periodically with the measured ingest rate."""
+    def wants_replan(self, step: int, rate: float,
+                     sla: Optional[SLATracker] = None) -> Optional[str]:
+        """Pure trigger check (no state change): the replan reason a call
+        to :meth:`observe` at these arguments would act on, or ``None``
+        for a hold. Split out so a fleet scheduler can *collect* triggers
+        across tenants and batch them into one arbitration pass instead
+        of letting every tenant replan the moment it fires."""
         if not self.history:
-            # observe() before initial_plan() used to IndexError on
-            # history[-1]; take the initial plan lazily instead
-            return self.initial_plan(rate, step=step)
+            return "initial"
         out_of_band = (rate > self.planned_rate * self.headroom
                        or rate < self.planned_rate / self.headroom)
         sla_bad = sla is not None and not sla.ok()
         if (not out_of_band and not sla_bad) or \
                 step - self._last_change < self.cooldown:
-            return OffloadDecision(step, rate, self.cut, "hold",
-                                   self.history[-1].plan, self.frontier,
-                                   dict(self.assignment), self.codec)
-        # replan event: re-run codec admission against the windowed SLA
-        # report; when admission widens or moves the candidate set, the
-        # (frontier x pool x codec) search decides. Codec hysteresis:
-        # within codec_cooldown of the last swap only the incumbent
-        # codec is searched.
+            return None
+        return "sla" if sla_bad else (
+            "rate_up" if rate > self.planned_rate else "rate_down")
+
+    def hold_decision(self, step: int, rate: float) -> OffloadDecision:
+        """The no-change decision (not appended to history, matching the
+        historical observe() hold path)."""
+        return OffloadDecision(step, rate, self.cut, "hold",
+                               self.history[-1].plan, self.frontier,
+                               dict(self.assignment), self.codec)
+
+    def replan(self, step: int, rate: float,
+               sla: Optional[SLATracker] = None,
+               reason: Optional[str] = None) -> OffloadDecision:
+        """Execute a replan event: re-run codec admission against the
+        windowed SLA report; when admission widens or moves the candidate
+        set, the (frontier x pool x codec) search decides. Codec
+        hysteresis: within codec_cooldown of the last swap only the
+        incumbent codec is searched. Callers normally go through
+        :meth:`observe`; the fleet scheduler calls this directly (after
+        :meth:`set_resources` with the tenant's residual spec) for the
+        tenants its arbitration pass granted a replan."""
+        if not self.history:
+            return self.initial_plan(rate, step=step)
+        if reason is None:
+            reason = ("sla" if sla is not None and not sla.ok() else
+                      "rate_up" if rate > self.planned_rate else "rate_down")
         old_identity = self._identity(self.assignment, self.codec)
         if self._adaptive and \
                 step - self._last_codec_change >= self.codec_cooldown:
@@ -215,8 +254,6 @@ class OffloadController:
         if new_codec != self.codec:
             self.codec = new_codec
             self._last_codec_change = step
-        reason = "sla" if sla_bad else (
-            "rate_up" if rate > self.planned_rate else "rate_down")
         if self._identity(plan.assignment, self.codec) != old_identity:
             self._last_change = step
         self.planned_rate, self.frontier = rate, frontier
@@ -225,6 +262,18 @@ class OffloadController:
         d = self._decide(step, rate, reason, plan, frontier)
         self.history.append(d)
         return d
+
+    def observe(self, step: int, rate: float,
+                sla: Optional[SLATracker] = None) -> OffloadDecision:
+        """Called periodically with the measured ingest rate."""
+        if not self.history:
+            # observe() before initial_plan() used to IndexError on
+            # history[-1]; take the initial plan lazily instead
+            return self.initial_plan(rate, step=step)
+        reason = self.wants_replan(step, rate, sla)
+        if reason is None:
+            return self.hold_decision(step, rate)
+        return self.replan(step, rate, sla, reason)
 
     def migrations(self) -> int:
         ids = [(tuple(sorted(d.assignment.items())), d.codec)

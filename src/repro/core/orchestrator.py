@@ -282,30 +282,33 @@ class Orchestrator:
             + (f" ({len(notes)} kept declared)" if notes else ""))
         return itertools.chain([first], it)
 
-    # -- main loop ----------------------------------------------------------
-    def run(self, batches, rate_fn: Optional[Callable[[int], float]] = None,
-            seed: int = 0, fixed_cut: Optional[int] = None,
-            fixed_frontier: Optional[Iterable[str]] = None,
-            record_outputs: bool = False) -> JobMetrics:
-        """Run the job. ``fixed_cut`` (linear) or ``fixed_frontier`` (DAG)
-        pins the partition (reference runs / ablations); otherwise the
-        offload controller's plan drives which segment each op executes
-        in, re-partitioning on migration."""
-        root_rng = jax.random.PRNGKey(seed)
-        if self.job.measured_costs:
-            batches = self._measure_costs(batches)
-        dec = self.controller.initial_plan(rate_fn(0) if rate_fn else 1e4)
+    # -- step primitives ----------------------------------------------------
+    # run() composes these; the fleet orchestrator (core/fleet) drives
+    # them directly so N tenant jobs can interleave batch execution with
+    # fleet-arbitrated (instead of per-job immediate) replanning.
+
+    def begin(self, rate0: float, seed: int = 0,
+              fixed_cut: Optional[int] = None,
+              fixed_frontier: Optional[Iterable[str]] = None,
+              decision=None):
+        """Take (or adopt) the initial plan and arm the run state.
+        ``decision`` lets a fleet admission pass hand over the
+        OffloadDecision it already took through this job's controller —
+        ``begin`` then must not call ``initial_plan`` a second time."""
+        self._root_rng = jax.random.PRNGKey(seed)
+        dec = decision if decision is not None else \
+            self.controller.initial_plan(rate0)
         if fixed_frontier is not None:
             self.frontier = self.pipeline.check_frontier(fixed_frontier)
         elif fixed_cut is not None:
             self.frontier = frozenset(self.pipeline.names[:fixed_cut])
         else:
             self.frontier = dec.frontier
-        pinned = fixed_cut is not None or fixed_frontier is not None
+        self._pinned = fixed_cut is not None or fixed_frontier is not None
         self.cut = len(self.frontier)
         # the executed plan identity (assignment + codec) in force; a
         # pinned reference run keeps it constant -> 0 executed migrations
-        if pinned:
+        if self._pinned:
             e = self.cluster.edge_pools[0].name
             c = self.cluster.cloud_pools[0].name
             self._exec_assignment = {
@@ -317,63 +320,78 @@ class Orchestrator:
         self.metrics.decisions.append(
             f"0:init cut={self.cut} codec={self.codec.name}")
         self._uplink = self._uplink_fn()
-        for step, batch in enumerate(batches):
-            t0 = time.perf_counter()
-            bd = {k: jnp.asarray(v) for k, v in batch.data.items()}
-            # a fresh per-step key: pipelines with no rng-threading op used
-            # to see the SAME key every batch (stale-RNG bug); splitting
-            # here makes randomness advance regardless of the op set
-            bd["rng"] = jax.random.fold_in(root_rng, step)
-            if self.is_graph:
-                self.states, out = self.pipeline.run(self.states, bd,
-                                                     self.frontier,
-                                                     uplink=self._uplink)
-            else:
-                self.states, out = self.pipeline.run(self.states, bd,
-                                                     self.cut,
-                                                     uplink=self._uplink)
-            self.metrics.cuts.append(self.cut)
-            self.metrics.assignments.append(self.frontier)
-            self.metrics.codecs.append(self.codec.name)
-            self.metrics.plan_identities.append(
-                (tuple(sorted(self._exec_assignment.items())),
-                 self.codec.name))
-            if record_outputs:
-                self.metrics.outputs.append(
-                    {k: np.asarray(v) for k, v in out.items() if k != "rng"})
-            if "drifted" in out and bool(out["drifted"]):
-                self.metrics.drift_alarms += 1
-                self._apply_drift_response()
-            dt = time.perf_counter() - t0
-            rate = batch.n / max(dt, 1e-9)
-            self.sla.observe(dt, rate)
-            offered = rate_fn(step) if rate_fn else rate
-            d = self.controller.observe(step, offered, self.sla)
-            if d.reason != "hold":
-                self.metrics.decisions.append(
-                    f"{step}:{d.reason} cut={d.cut}")
-            if not pinned:
-                if d.codec != self.codec.name:
-                    # codec migration: new wire round-trip, flushed EF
-                    # residuals (frontier may or may not move with it)
-                    self._swap_codec(d.codec, step)
-                if d.frontier != self.frontier:
-                    # migration: re-partition — the next pipeline.run
-                    # re-fuses segments for the new cut (compile cache
-                    # makes revisits free)
-                    self.metrics.decisions.append(
-                        f"{step}:repartition {self.cut}->{d.cut} "
-                        f"edge={sorted(d.frontier)}")
-                    self.frontier = d.frontier
-                    self.cut = len(d.frontier)
-                self._exec_assignment = dict(d.assignment)
-            # elastic cloud-pool sizing: grow/shrink the worker count when
-            # the offered rate persistently over/under-runs the pool; a
-            # changed plan is DRIVEN through the checkpoint rescale cycle
-            plan = self.elastic.observe(step, offered, rate)
-            if plan.changed:
-                self._apply_rescale(step, plan)
-            self.metrics.events += batch.n
+        return dec
+
+    def execute_batch(self, step: int, batch,
+                      record_outputs: bool = False) -> float:
+        """Execute one batch under the plan in force; record metrics and
+        feed the SLA tracker. Returns the measured event rate."""
+        t0 = time.perf_counter()
+        bd = {k: jnp.asarray(v) for k, v in batch.data.items()}
+        # a fresh per-step key: pipelines with no rng-threading op used
+        # to see the SAME key every batch (stale-RNG bug); splitting
+        # here makes randomness advance regardless of the op set
+        bd["rng"] = jax.random.fold_in(self._root_rng, step)
+        if self.is_graph:
+            self.states, out = self.pipeline.run(self.states, bd,
+                                                 self.frontier,
+                                                 uplink=self._uplink)
+        else:
+            self.states, out = self.pipeline.run(self.states, bd,
+                                                 self.cut,
+                                                 uplink=self._uplink)
+        self.metrics.cuts.append(self.cut)
+        self.metrics.assignments.append(self.frontier)
+        self.metrics.codecs.append(self.codec.name)
+        self.metrics.plan_identities.append(
+            (tuple(sorted(self._exec_assignment.items())),
+             self.codec.name))
+        if record_outputs:
+            self.metrics.outputs.append(
+                {k: np.asarray(v) for k, v in out.items() if k != "rng"})
+        if "drifted" in out and bool(out["drifted"]):
+            self.metrics.drift_alarms += 1
+            self._apply_drift_response()
+        dt = time.perf_counter() - t0
+        rate = batch.n / max(dt, 1e-9)
+        self.sla.observe(dt, rate)
+        self.metrics.events += batch.n
+        return rate
+
+    def apply_decision(self, step: int, d) -> None:
+        """Apply an OffloadDecision to the executing partition: codec
+        migration and/or re-partition. Hold decisions are no-ops beyond
+        the decision log."""
+        if d.reason != "hold":
+            self.metrics.decisions.append(
+                f"{step}:{d.reason} cut={d.cut}")
+        if self._pinned:
+            return
+        if d.codec != self.codec.name:
+            # codec migration: new wire round-trip, flushed EF
+            # residuals (frontier may or may not move with it)
+            self._swap_codec(d.codec, step)
+        if d.frontier != self.frontier:
+            # migration: re-partition — the next pipeline.run
+            # re-fuses segments for the new cut (compile cache
+            # makes revisits free)
+            self.metrics.decisions.append(
+                f"{step}:repartition {self.cut}->{d.cut} "
+                f"edge={sorted(d.frontier)}")
+            self.frontier = d.frontier
+            self.cut = len(d.frontier)
+        self._exec_assignment = dict(d.assignment)
+
+    def elastic_step(self, step: int, offered: float, rate: float) -> None:
+        """Elastic cloud-pool sizing: grow/shrink the worker count when
+        the offered rate persistently over/under-runs the pool; a
+        changed plan is DRIVEN through the checkpoint rescale cycle."""
+        plan = self.elastic.observe(step, offered, rate)
+        if plan.changed:
+            self._apply_rescale(step, plan)
+
+    def finish(self) -> JobMetrics:
+        """Derive the executed-migration count and final telemetry."""
         # migrations = plan-identity changes that actually EXECUTED (the
         # full (assignment, codec) identity per core/offload's contract:
         # a pod rebalance that keeps the frontier, or a codec-only swap,
@@ -388,3 +406,24 @@ class Orchestrator:
         self.metrics.preq = self._collect_op_metrics()
         self.metrics.sla = self.sla.report()
         return self.metrics
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, batches, rate_fn: Optional[Callable[[int], float]] = None,
+            seed: int = 0, fixed_cut: Optional[int] = None,
+            fixed_frontier: Optional[Iterable[str]] = None,
+            record_outputs: bool = False) -> JobMetrics:
+        """Run the job. ``fixed_cut`` (linear) or ``fixed_frontier`` (DAG)
+        pins the partition (reference runs / ablations); otherwise the
+        offload controller's plan drives which segment each op executes
+        in, re-partitioning on migration."""
+        if self.job.measured_costs:
+            batches = self._measure_costs(batches)
+        self.begin(rate_fn(0) if rate_fn else 1e4, seed=seed,
+                   fixed_cut=fixed_cut, fixed_frontier=fixed_frontier)
+        for step, batch in enumerate(batches):
+            rate = self.execute_batch(step, batch, record_outputs)
+            offered = rate_fn(step) if rate_fn else rate
+            d = self.controller.observe(step, offered, self.sla)
+            self.apply_decision(step, d)
+            self.elastic_step(step, offered, rate)
+        return self.finish()

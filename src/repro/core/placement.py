@@ -419,6 +419,7 @@ def _dp_tables(graph, spec: ClusterSpec, rate: float):
     latm = [[0.0] * P for _ in range(P)]
     bwm = [[1.0] * P for _ in range(P)]
     ratm = [[1.0] * P for _ in range(P)]
+    epbm = [[0.0] * P for _ in range(P)]
     for a in range(P):
         for b in range(P):
             if a == b:
@@ -427,6 +428,7 @@ def _dp_tables(graph, spec: ClusterSpec, rate: float):
             latm[a][b] = ln.latency
             bwm[a][b] = ln.bw
             ratm[a][b] = get_codec(ln.codec).ratio
+            epbm[a][b] = ln.energy_per_byte
     haz = graph.hazard_parent_indices
     flow_parents: List[List[int]] = [[] for _ in range(n)]
     flow_children: List[List[int]] = [[] for _ in range(n)]
@@ -450,7 +452,7 @@ def _dp_tables(graph, spec: ClusterSpec, rate: float):
     return {
         "n": n, "P": P, "kinds": kinds, "pool_names": pool_names,
         "util": util, "lat": lat, "eng": eng, "ok": ok,
-        "latm": latm, "bwm": bwm, "ratm": ratm,
+        "latm": latm, "bwm": bwm, "ratm": ratm, "epbm": epbm,
         "haz": haz, "flow_parents": flow_parents,
         "flow_children": flow_children,
         "last_flow": last_flow, "last_need": last_need,
@@ -473,7 +475,7 @@ def _dp_pass(t: dict, rate: float, objective: Objective, incumbent: float,
     n, P = t["n"], t["P"]
     kinds, util, lat, eng, ok = (t["kinds"], t["util"], t["lat"], t["eng"],
                                  t["ok"])
-    latm, bwm, ratm = t["latm"], t["bwm"], t["ratm"]
+    latm, bwm, ratm, epbm = t["latm"], t["bwm"], t["ratm"], t["epbm"]
     haz, flow_parents, flow_children = (t["haz"], t["flow_parents"],
                                         t["flow_children"])
     last_flow, last_need = t["last_flow"], t["last_need"]
@@ -530,6 +532,7 @@ def _dp_pass(t: dict, rate: float, objective: Objective, incumbent: float,
                 # any aggregate dict; most candidates die here -----------
                 nmaxlu = maxlu
                 ships = {}        # link key -> new total bytes
+                ship_e = 0.0      # link transmit energy of the new ships
                 start = 0.0
                 src_ships = is_src and p != sidx and p not in srcsh
                 if src_ships:
@@ -540,6 +543,7 @@ def _dp_pass(t: dict, rate: float, objective: Objective, incumbent: float,
                     if lu > nmaxlu:
                         nmaxlu = lu
                     ships[(sidx, p)] = nb
+                    ship_e += ratm[sidx][p] * sb * rate * epbm[sidx][p]
                 if is_src and p != sidx:
                     start = latm[sidx][p]
                 overrun = False
@@ -557,6 +561,8 @@ def _dp_pass(t: dict, rate: float, objective: Objective, incumbent: float,
                         if lu > nmaxlu:
                             nmaxlu = lu
                         ships[lk] = nb
+                        ship_e += (ratm[q][p] * out_bytes[i] * rate
+                                   * epbm[q][p])
                         crossed.append(i)
                 if overrun:
                     continue
@@ -568,7 +574,7 @@ def _dp_pass(t: dict, rate: float, objective: Objective, incumbent: float,
                     if ti > start:
                         start = ti
                 fj = start + latj[p]
-                nen = energy + engj[p]
+                nen = energy + engj[p] + ship_e
                 nlat_dead = lat_dead
                 for i in f_par:
                     if last_flow[i] == j:

@@ -121,6 +121,32 @@ def pick_codec(sla: SLA, candidates: Optional[Iterable] = None,
     return min(cands, key=lambda c: (c.ratio, c.error_bound))
 
 
+def plan_violation(plan, sla: SLA) -> Optional[str]:
+    """Why a modeled :class:`~repro.core.costmodel.PipelinePlan` cannot
+    meet ``sla`` — a loud human-readable reason, or ``None`` when the
+    plan is admissible. This is the fleet scheduler's admission predicate
+    (:mod:`repro.core.fleet`): a tenant whose *best* plan under residual
+    capacity trips any clause here is rejected or queued, never silently
+    degraded.
+
+    Checks, in order of loudness:
+
+    * placement feasibility (some pool or link over capacity — the plan's
+      own ``notes`` carry the specifics);
+    * modeled critical-path latency against ``sla.max_latency_s``.
+
+    Throughput is rate-implicit — an infeasible plan at the tenant's
+    demand rate *is* the throughput failure — so no separate clause.
+    """
+    if not plan.feasible:
+        detail = "; ".join(plan.notes) if plan.notes else "over capacity"
+        return f"infeasible plan: {detail}"
+    if plan.latency_s > sla.max_latency_s:
+        return (f"modeled latency {plan.latency_s:.4f}s exceeds SLA "
+                f"max_latency_s={sla.max_latency_s:.4f}s")
+    return None
+
+
 @dataclass
 class SLATracker:
     """Windowed SLA telemetry: every reported statistic covers the last

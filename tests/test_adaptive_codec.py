@@ -77,6 +77,47 @@ def test_sla_tracker_rejects_nonpositive_window():
         SLATracker(SLA(), window=0)
 
 
+def test_interleaved_trackers_recover_independently():
+    """Multi-tenant telemetry: two trackers with DIFFERENT windows fed
+    from one shared clock (the fleet's round-robin interleave) must keep
+    fully independent state — a shared saturation burst ages out of each
+    tracker at its own window, and one tenant's recovery never reads the
+    other's history."""
+    sla = SLA(max_latency_s=0.1)
+    short = SLATracker(sla, window=10)
+    long = SLATracker(sla, window=40)
+    # shared clean warmup, then a shared 12-step saturation burst — the
+    # same (latency, throughput) sample goes to both, as when one
+    # congested uplink slows every tenant's round
+    for _ in range(20):
+        for t in (short, long):
+            t.observe(0.01, 1e4)
+    for _ in range(12):
+        for t in (short, long):
+            t.observe(0.5, 1e4)
+    assert not short.ok() and not long.ok()
+    assert short.violation_rate == pytest.approx(1.0)      # window=10 < burst
+    # long window not yet full: 32 samples observed, 12 violating
+    assert long.violation_rate == pytest.approx(12 / 32)
+    # 10 clean interleaved rounds: the short window is fully clean and
+    # recovers; the long window still carries the burst
+    for _ in range(10):
+        for t in (short, long):
+            t.observe(0.01, 1e4)
+    assert short.ok() and short.violation_rate == 0.0
+    assert not long.ok()
+    assert long.violation_rate == pytest.approx(12 / 40)
+    # after enough rounds the long window ages the burst out too
+    for _ in range(30):
+        long.observe(0.01, 1e4)
+    assert long.ok() and long.violation_rate == 0.0
+    # the recovered short tracker was untouched by long's extra steps
+    assert short.window_checks == 10 and short.violation_rate == 0.0
+    # lifetime audit counters stay per-tenant
+    assert short.violations == 12 and long.violations == 12
+    assert short.checks == 42 and long.checks == 72
+
+
 # ---------------------------------------------------------------------------
 # satellite bugfix: observe() before initial_plan()
 # ---------------------------------------------------------------------------

@@ -513,3 +513,84 @@ def test_orchestrator_identity_codec_stays_bitwise_with_default_sla():
     for x, y in zip(a.outputs, b.outputs):
         for k in x:
             np.testing.assert_array_equal(x[k], y[k])
+
+
+# ---------------------------------------------------------------------------
+# per-link energy model (Link.energy_per_byte)
+# ---------------------------------------------------------------------------
+
+def _energy_spec(epb: float, codec: str = "identity") -> cm.ClusterSpec:
+    return cm.ClusterSpec(
+        pools=[cm.EDGE_NODE, cm.CLOUD_POD],
+        links=[cm.Link("edge", "cloud", bw=1e9, latency=20e-3, codec=codec,
+                       energy_per_byte=epb)])
+
+
+def test_link_energy_per_byte_priced_into_energy_aggregate():
+    """Every crossing adds wire_bytes * rate * energy_per_byte watts:
+    the delta vs an energy-free link is exactly the summed link-byte
+    rate times the joules-per-byte, in both evaluators."""
+    pipe = pl.standard_stream_pipeline(dim=8)
+    rate, epb = 1e4, 3e-7
+    assign = {n: ("edge" if i < 3 else "cloud")
+              for i, n in enumerate(pipe.names)}
+    for codec in ("identity", "int8_ef"):
+        zero, priced = _energy_spec(0.0, codec), _energy_spec(epb, codec)
+        g0 = cm.evaluate_graph_plan(
+            pipe.costs(), pipe.flow_edges, assign, zero, rate,
+            source_consumers=pipe.source_consumers,
+            source_bytes=pipe.source_bytes_per_event)
+        g1 = cm.evaluate_graph_plan(
+            pipe.costs(), pipe.flow_edges, assign, priced, rate,
+            source_consumers=pipe.source_consumers,
+            source_bytes=pipe.source_bytes_per_event)
+        # bytes/s on each link = utilization * bw (codec-compressed wire)
+        want = sum(u * priced.link(*k).bw * epb
+                   for k, u in g1.link_utilization.items())
+        assert want > 0.0
+        assert g1.energy_w - g0.energy_w == pytest.approx(want)
+        # linear evaluator prices the same crossings identically
+        l0 = cm.evaluate_plan(pipe.costs(), assign, zero, rate)
+        l1 = cm.evaluate_plan(pipe.costs(), assign, priced, rate)
+        assert l1.energy_w - l0.energy_w == pytest.approx(want)
+        # everything else is untouched by the energy term
+        assert g1.latency_s == g0.latency_s
+        assert g1.link_utilization == g0.link_utilization
+
+
+def test_link_energy_default_zero_is_bitwise_neutral():
+    """Links that don't declare energy_per_byte price exactly as before
+    (the default 0.0 adds literal zero to the aggregate)."""
+    pipe = pl.standard_stream_pipeline(dim=8)
+    assign = {n: ("edge" if i < 2 else "cloud")
+              for i, n in enumerate(pipe.names)}
+    bare = cm.ClusterSpec(
+        pools=[cm.EDGE_NODE, cm.CLOUD_POD],
+        links=[cm.Link("edge", "cloud", bw=1e9, latency=20e-3)])
+    explicit = _energy_spec(0.0)
+    for spec in (bare, explicit):
+        assert spec.link("edge", "cloud").energy_per_byte == 0.0
+    g_bare = cm.evaluate_graph_plan(
+        pipe.costs(), pipe.flow_edges, assign, bare, 1e4,
+        source_consumers=pipe.source_consumers,
+        source_bytes=pipe.source_bytes_per_event)
+    g_expl = cm.evaluate_graph_plan(
+        pipe.costs(), pipe.flow_edges, assign, explicit, 1e4,
+        source_consumers=pipe.source_consumers,
+        source_bytes=pipe.source_bytes_per_event)
+    assert g_bare.energy_w == g_expl.energy_w
+
+
+def test_energy_weighted_placement_reacts_to_link_energy():
+    """With an energy-weighted objective, a sufficiently expensive
+    uplink pulls the frontier toward keeping bytes off the wire — the
+    chosen plan under a huge energy_per_byte must not ship MORE link
+    bytes than the energy-free choice."""
+    g = pl.fanout_stream_graph(dim=8)
+    obj = Objective(latency_weight=1.0, energy_weight=50.0)
+    free, _ = place_frontier(g, _energy_spec(0.0), 1e4, obj)
+    costly, _ = place_frontier(g, _energy_spec(1e-2), 1e4, obj)
+    bytes_of = lambda p, s: sum(u * s.link(*k).bw
+                                for k, u in p.link_utilization.items())
+    assert bytes_of(costly, _energy_spec(1e-2)) <= \
+        bytes_of(free, _energy_spec(0.0)) + 1e-9

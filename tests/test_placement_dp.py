@@ -418,3 +418,55 @@ def test_orchestrator_measured_costs_end_to_end():
     assert any(d.startswith("0:measured-costs") for d in m.decisions), \
         m.decisions
     assert m.events == 96
+
+
+# ---------------------------------------------------------------------------
+# per-link energy model: the DP mirrors the evaluator's energy term
+# ---------------------------------------------------------------------------
+
+def energy_spec(epb_scale: float) -> cm.ClusterSpec:
+    """The multipool topology with per-link transmit energy declared
+    (different joules/byte per link, scaled by epb_scale)."""
+    base = multipool_spec()
+    links = [cm.Link("edge_a", "cloud", bw=2e8, latency=0.03,
+                     energy_per_byte=3e-7 * epb_scale),
+             cm.Link("edge_b", "cloud", bw=1e8, latency=0.05,
+                     energy_per_byte=8e-7 * epb_scale),
+             cm.Link("edge_a", "edge_b", bw=5e8, latency=0.005,
+                     energy_per_byte=1e-7 * epb_scale)]
+    return cm.ClusterSpec(dict(base.pools), links=links)
+
+
+def test_dp_matches_enumeration_under_link_energy():
+    """With energy_per_byte on the links AND an energy-weighted
+    objective, DP and enumeration must still be plan-identical — the DP
+    tables mirror the evaluator's link-energy arithmetic exactly."""
+    obj = Objective(latency_weight=1.0, energy_weight=25.0)
+    for scale in (0.0, 1.0, 100.0):
+        spec = energy_spec(scale)
+        for seed in (1, 5, 13, 21):
+            g = random_graph(np.random.default_rng(seed), 6)
+            plan_dp, f_dp = place_frontier_dp(g, spec, 1e4, obj)
+            plan_en, f_en = place_frontier(g, spec, 1e4, obj,
+                                           method="enumerate")
+            assert plan_dp.assignment == plan_en.assignment, \
+                f"scale {scale} seed {seed}"
+            assert f_dp == f_en
+            assert obj.score(plan_dp) == pytest.approx(obj.score(plan_en))
+            assert plan_dp.energy_w == pytest.approx(plan_en.energy_w)
+
+
+def test_dp_energy_term_matches_evaluator_repricing():
+    """The DP's internal energy accumulation must agree with pricing its
+    winning assignment through evaluate_graph_plan (the differential
+    oracle for the satellite's new energy term)."""
+    spec = energy_spec(10.0)
+    obj = Objective(latency_weight=1.0, energy_weight=25.0)
+    for seed in (2, 9):
+        g = random_graph(np.random.default_rng(seed), 7)
+        plan_dp, _ = place_frontier_dp(g, spec, 1e4, obj)
+        repriced = cm.evaluate_graph_plan(
+            g.costs(), g.flow_edges, plan_dp.assignment, spec, 1e4,
+            source_consumers=g.source_consumers,
+            source_bytes=g.source_bytes_per_event)
+        assert plan_dp.energy_w == pytest.approx(repriced.energy_w)
