@@ -645,6 +645,83 @@ def bench_fleet(rows, quick):
                  f"ledger ok={not fleet.scheduler.ledger.check()}"))
 
 
+def bench_membership(rows, quick):
+    """Dynamic-topology control path (core/membership): EWMA latency
+    probe refresh (spec rewrite per sample), a pool join -> forced
+    replan cycle, and the full silent pool-loss recovery (lease expiry
+    -> involuntary checkpoint-rescale -> replan excluding the dead
+    pool). Churn handling rides the per-step control path, so its cost
+    must stay control-plane sized, not execute-sized."""
+    from repro.core import costmodel as cm
+    from repro.core.membership import MembershipDirectory
+    from repro.core.orchestrator import Orchestrator, StreamJob
+    from repro.core.pipeline import fanout_stream_graph
+    from repro.core.sla import SLA
+
+    sla = SLA(max_latency_s=1e3, error_budget=11.0)
+    seed_spec = cm.ClusterSpec(
+        pools=[cm.EDGE_NODE, cm.CLOUD_POD],
+        links=[cm.Link("edge", "cloud", bw=2e6, latency=20e-3)])
+
+    # probe refresh: one EWMA update + authoritative spec rewrite
+    d = MembershipDirectory(seed_spec)
+    n_probes = 200 if quick else 1000
+    t0 = time.perf_counter()
+    for i in range(n_probes):
+        d.observe_latency("edge", "cloud", 20e-3 * (1.0 + (i % 7) * 0.01),
+                          now=i)
+    us = (time.perf_counter() - t0) / n_probes * 1e6
+    rows.append(("latency_probe_refresh", us,
+                 f"{n_probes} probes -> v{d.version}, "
+                 f"{1e6 / us:.0f} probes/s"))
+
+    pool = cm.Resource("edge_b", "edge", chips=2, flops=4e12, mem_bw=100e9,
+                       mem_cap=8e9, net_bw=1e9, net_latency=5e-3)
+    link = cm.Link("edge_b", "cloud", bw=8e6, latency=5e-3)
+
+    def live_orchestrator():
+        dd = MembershipDirectory(seed_spec)
+        orch = Orchestrator(StreamJob("m", dim=8, sla=sla, membership=dd,
+                                      pipeline=fanout_stream_graph(8)))
+        orch.begin(1e4, seed=0)
+        return dd, orch
+
+    iters = 3 if quick else 6
+
+    # join -> event drain -> forced replan onto the new pool
+    dd, orch = live_orchestrator()
+    t0 = time.perf_counter()
+    for i in range(iters):
+        step = 2 * i
+        dd.register(pool, links=[link], now=step, monitored=False)
+        orch.topology_step(step, 1e4)
+        assert "edge_b" in set(orch._exec_assignment.values())
+        dd.deregister("edge_b", now=step + 1)     # reset (drained below)
+        orch.topology_step(step + 1, 1e4)
+    us = (time.perf_counter() - t0) / (2 * iters) * 1e6
+    joins = sum(1 for ln in orch.metrics.decisions if ":pool_joined" in ln)
+    rows.append(("membership_join_replan", us,
+                 f"{iters} join/leave cycles, {joins} forced replans"))
+
+    # silent loss: heartbeats stop -> lease expiry inside the step's
+    # tick -> involuntary recover + replan excluding the dead pool
+    dd, orch = live_orchestrator()
+    now = [0]
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        s = now[0]
+        dd.register(pool, links=[link], now=s)    # monitored: leased
+        orch.topology_step(s, 1e4)
+        dead = s + dd.lease_ticks + 1             # silence past the lease
+        orch.topology_step(dead, 1e4)
+        assert "edge_b" not in orch.controller.resources.pools
+        now[0] = dead + 1
+    us = (time.perf_counter() - t0) / iters * 1e6
+    rows.append(("membership_pool_loss_recover", us,
+                 f"{iters} lease-expiry recoveries, "
+                 f"rescales={orch.elastic.rescales}"))
+
+
 def bench_roofline_summary(rows, quick):
     """Surface the dry-run roofline verdicts (if the sweep has run)."""
     try:
@@ -667,7 +744,7 @@ ALL_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                bench_dag_placement, bench_dag_place_multipool,
                bench_dag_place_dp,
                bench_adaptive_codec_replan, bench_uplink_codec,
-               bench_fusion_join, bench_fleet,
+               bench_fusion_join, bench_fleet, bench_membership,
                bench_s4_feature_matrix, bench_generators, bench_sketches,
                bench_kernel_dispatch,
                bench_train_micro, bench_serve_micro, bench_roofline_summary]
@@ -681,7 +758,7 @@ SMOKE_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                  bench_dag_placement, bench_dag_place_multipool,
                  bench_dag_place_dp,
                  bench_adaptive_codec_replan, bench_uplink_codec,
-                 bench_fusion_join, bench_fleet,
+                 bench_fusion_join, bench_fleet, bench_membership,
                  bench_s4_feature_matrix, bench_generators, bench_sketches,
                  bench_kernel_dispatch]
 

@@ -1,0 +1,96 @@
+"""Dynamic topology: pools join, leave, and FAIL mid-stream
+(core/membership — S2CE's elastic hybrid cloud/edge axis).
+
+A :class:`MembershipDirectory` owns the authoritative, versioned
+ClusterSpec. The run starts on a static edge+cloud seed, then:
+
+* two edge pools ``register()`` mid-run with locality metadata — the
+  orchestrator replans onto the better one the moment it joins,
+* latency probes (EWMA) keep rewriting the directory's link table from
+  measurements, so the placement DP prices real latencies, not the
+  declared priors,
+* one pool goes SILENT mid-ramp: its heartbeat lease expires, the
+  directory declares it dead, and the orchestrator recovers through the
+  involuntary checkpoint-rescale cycle + a forced replan that excludes
+  the dead pool — all on the deterministic sim clock (no wall time).
+
+  PYTHONPATH=src python examples/dynamic_topology.py
+"""
+
+from repro.core import costmodel as cm
+from repro.core import pipeline as pl
+from repro.core.membership import Locality, MembershipDirectory
+from repro.core.orchestrator import Orchestrator, StreamJob
+from repro.core.sla import SLA
+from repro.streams.generators import HyperplaneStream
+
+STEPS = 16
+RATE = 1e4
+
+
+def main():
+    # -- seed topology: one gateway edge + one cloud pod -------------------
+    seed = cm.ClusterSpec(
+        pools=[cm.EDGE_NODE, cm.CLOUD_POD],
+        links=[cm.Link("edge", "cloud", bw=2e6, latency=20e-3)])
+    directory = MembershipDirectory(seed, lease_ticks=3)
+    print(f"== seed directory ==\n  {directory!r}")
+
+    # -- two edge pools join with locality metadata ------------------------
+    print("\n== registrations ==")
+    for name, loc, flops, link in [
+        ("edge_rack", Locality(0.5, 0.0, region="metro"), 4e12,
+         cm.Link("edge_rack", "cloud", bw=8e6, latency=5e-3)),
+        ("edge_far", Locality(120.0, 90.0, region="rural"), 1e12,
+         cm.Link("edge_far", "cloud", bw=1e6, latency=60e-3)),
+    ]:
+        ev = directory.register(
+            cm.Resource(name, "edge", chips=2, flops=flops, mem_bw=100e9,
+                        mem_cap=8e9, net_bw=1e9, net_latency=5e-3),
+            links=[link], locality=loc, now=0)
+        print(f"  v{ev.version} {ev.kind:12s} {ev.subject:10s} {ev.detail}")
+
+    # latency probes refine the rack uplink from measurements
+    for t in range(3):
+        directory.observe_latency("edge_rack", "cloud", 4e-3, now=0)
+    est = directory.probe_estimate("edge_rack", "cloud")
+    print(f"  probe edge_rack->cloud EWMA latency {est * 1e3:.2f} ms")
+
+    # -- the job: a DAG pipeline over the LIVE directory -------------------
+    job = StreamJob("dyn", dim=8, sla=SLA(max_latency_s=1e3,
+                                          error_budget=11.0),
+                    pipeline=pl.fanout_stream_graph(8), membership=directory,
+                    sla_window=6)
+    orch = Orchestrator(job)
+    gen = HyperplaneStream(dim=8, seed=0, horizon=STEPS * 32.0)
+
+    def stream():
+        for step in range(STEPS):
+            # edge_rack heartbeats for the first half of the run, then
+            # goes SILENT — a failure, not a polite deregistration
+            if step <= STEPS // 2:
+                directory.heartbeat("edge_rack", now=step)
+            directory.heartbeat("edge_far", now=step)
+            yield gen.batch(step, 32)
+
+    print(f"\n== run: {STEPS} steps, edge_rack dies silently at "
+          f"t={STEPS // 2} (lease={directory.lease_ticks}) ==")
+    metrics = orch.run(stream(), rate_fn=lambda s: RATE)
+
+    print("\n  control trajectory:")
+    for line in metrics.decisions:
+        print(f"    {line}")
+
+    # -- recovery report ---------------------------------------------------
+    print("\n== recovery ==")
+    final_pools = sorted(set(orch._exec_assignment.values()))
+    print(f"  directory now {directory!r}")
+    print(f"  final plan pools: {final_pools} "
+          f"(edge_rack excluded: {'edge_rack' not in final_pools})")
+    print(f"  events={metrics.events} migrations={metrics.migrations} "
+          f"rescales={metrics.rescales}")
+    print(f"  windowed SLA ok after recovery: {orch.sla.ok()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -90,10 +90,18 @@ class ClusterSpec(Mapping):
     side's ``net_bw`` and latency the slower side's ``net_latency`` —
     exactly the historical "charge the slow side" rule, so a wrapped
     two-pool dict prices identically to the old flat-dict model.
+
+    ``version`` is the topology generation stamp: a static spec stays at
+    0 forever; a :class:`~repro.core.membership.MembershipDirectory`
+    bumps it on every join/leave/failure/probe so consumers can tell a
+    re-derived snapshot from the one their plan was priced under.
+    Derived specs (:meth:`with_uplink_codec`, :meth:`residual`) carry
+    their base's version — they re-price the SAME topology generation.
     """
 
     def __init__(self, pools: Union[Dict[str, Resource], Sequence[Resource]],
-                 links: Iterable[Link] = ()):
+                 links: Iterable[Link] = (), *, version: int = 0):
+        self.version = int(version)
         if isinstance(pools, Mapping):
             self.pools: Dict[str, Resource] = dict(pools)
         else:
@@ -167,10 +175,21 @@ class ClusterSpec(Mapping):
     def link(self, src: str, dst: str) -> Link:
         """The declared link ``src -> dst``, or the derived default: the
         slower endpoint's ``net_bw``/``net_latency`` and the identity
-        codec (the historical charge-the-slow-side rule)."""
+        codec (the historical charge-the-slow-side rule).
+
+        An unknown endpoint raises ``ValueError`` naming the missing
+        pool AND the known pool set — under membership churn a stale
+        plan's pool name must fail loudly here, not as an ambiguous
+        ``KeyError`` deep inside a cost evaluation."""
         ln = self._links.get((src, dst))
         if ln is not None:
             return ln
+        for end in (src, dst):
+            if end not in self.pools:
+                raise ValueError(
+                    f"link {src}->{dst}: unknown pool {end!r} (known "
+                    f"pools: {sorted(self.pools)}); the pool may have "
+                    "deregistered or failed since this plan was priced")
         a, b = self.pools[src], self.pools[dst]
         # strict <: on equal net_bw the historical rule charged the
         # destination side (``prev if prev.net_bw < res.net_bw else res``)
@@ -194,7 +213,21 @@ class ClusterSpec(Mapping):
                 ln = self.link(e.name, c.name)
                 if override or ln.codec == "identity":
                     links[(e.name, c.name)] = replace(ln, codec=codec)
-        return ClusterSpec(self.pools, links.values())
+        return ClusterSpec(self.pools, links.values(), version=self.version)
+
+    def without_pool(self, name: str) -> "ClusterSpec":
+        """The topology with ``name`` (and every link touching it)
+        removed and the version bumped — how a consumer derives the
+        candidate set AFTER a pool left or failed, so the dead pool is
+        excluded before any placement search runs."""
+        if name not in self.pools:
+            raise ValueError(
+                f"without_pool: unknown pool {name!r} (known pools: "
+                f"{sorted(self.pools)})")
+        pools = {n: r for n, r in self.pools.items() if n != name}
+        links = [ln for ln in self._links.values()
+                 if name not in (ln.src, ln.dst)]
+        return ClusterSpec(pools, links, version=self.version + 1)
 
     def residual(self,
                  pool_load: Optional[Mapping] = None,
@@ -261,11 +294,11 @@ class ClusterSpec(Mapping):
             b = link_load.get(key, 0.0)
             out.append(replace(ln, bw=max(ln.bw - b, 1e-9)) if b > 0.0
                        else ln)
-        return ClusterSpec(pools, out)
+        return ClusterSpec(pools, out, version=self.version)
 
     def __repr__(self) -> str:
         pools = ", ".join(f"{n}:{r.kind}" for n, r in self.pools.items())
-        return (f"ClusterSpec({pools}; "
+        return (f"ClusterSpec(v{self.version}; {pools}; "
                 f"{len(self._links)} declared links)")
 
 

@@ -178,6 +178,49 @@ class FleetLedger:
     def release(self, tenant: str) -> Optional[Reservation]:
         return self.reservations.pop(tenant, None)
 
+    # -- membership churn ----------------------------------------------------
+    def set_spec(self, spec) -> None:
+        """Re-point the ledger at a new topology generation (a join or a
+        probe-driven latency refresh). Every existing reservation must
+        still reference known pools — a DEPARTURE must go through
+        :meth:`drop_pool`, which scrubs the dead pool's bookings."""
+        new = ClusterSpec.of(spec)
+        for name, r in self.reservations.items():
+            missing = sorted(
+                (set(r.pool_frac) | set(r.state_bytes)
+                 | {p for key in r.link_bytes for p in key})
+                - set(new.pools))
+            if missing:
+                raise ValueError(
+                    f"set_spec: tenant {name!r} still books on pool(s) "
+                    f"{missing} absent from the new spec; scrub "
+                    "departures through drop_pool")
+        self.spec = new
+
+    def drop_pool(self, pool: str, spec=None) -> List[str]:
+        """A pool left or failed: scrub every reservation's bookings on
+        it (pool fraction, resident state, link bytes on any link
+        touching it) and re-point at the survivor spec (derived via
+        :meth:`ClusterSpec.without_pool` unless given). Returns the
+        tenants whose bookings were touched — exactly the set whose
+        plans the scheduler must re-probe."""
+        new = ClusterSpec.of(spec) if spec is not None else \
+            self.spec.without_pool(pool)
+        if pool in new.pools:
+            raise ValueError(
+                f"drop_pool: new spec still contains pool {pool!r}")
+        touched = []
+        for name, r in self.reservations.items():
+            hit = r.pool_frac.pop(pool, None) is not None
+            hit = (r.state_bytes.pop(pool, None) is not None) or hit
+            for key in [k for k in r.link_bytes if pool in k]:
+                r.link_bytes.pop(key)
+                hit = True
+            if hit:
+                touched.append(name)
+        self.spec = new
+        return touched
+
     # -- invariants (property-tested) ---------------------------------------
     def check(self, tol: float = 1e-9) -> List[str]:
         """Capacity-invariant violations across ALL tenants (empty =
@@ -301,6 +344,56 @@ class FleetScheduler:
         self.log.append(f"leave {name}")
         return self.drain_queue()
 
+    # -- membership churn ----------------------------------------------------
+    def pool_joined(self, spec) -> List[AdmissionResult]:
+        """Capacity joined the fleet: re-point the shared ledger at the
+        new topology and immediately re-attempt admission for the queue
+        (priority order, FIFO within a tier — the same contract as a
+        departure's re-admission pass)."""
+        self.ledger.set_spec(spec)
+        self.log.append(
+            f"topology: capacity joined (spec v{self.ledger.spec.version})"
+            "; re-draining queue")
+        return self.drain_queue()
+
+    def pool_lost(self, pool: str, spec, step: int,
+                  offered: Optional[Mapping[str, float]] = None
+                  ) -> Dict[str, OffloadDecision]:
+        """A pool left or failed: scrub its ledger bookings, then force
+        a replan for every admitted tenant whose EXECUTING plan touched
+        it — in priority order, each re-priced against its residual
+        slice of the survivor spec and re-booked. Unaffected tenants
+        keep their plans and reservations untouched (their controllers
+        pick up the survivor spec at their next granted replan).
+        Returns the forced decisions, keyed by tenant."""
+        offered = dict(offered or {})
+        self.ledger.drop_pool(pool, spec)
+        affected = sorted(
+            (t.spec.priority, i, name)
+            for i, (name, t) in enumerate(self.tenants.items())
+            if pool in set(t.controller.assignment.values()))
+        decisions: Dict[str, OffloadDecision] = {}
+        for _, _, name in affected:
+            t = self.tenants[name]
+            rate = float(offered.get(name, t.spec.demand_rate))
+            self.ledger.release(name)
+            t.controller.set_resources(self.ledger.residual_spec())
+            d = t.controller.replan(step, rate, t.tracker,
+                                    reason="pool_lost")
+            self.ledger.reserve(name, d.plan,
+                                self._state_bytes(t, d.plan))
+            t.last_grant = step
+            decisions[name] = d
+            note = "" if d.plan.feasible else \
+                " [OVER CAPACITY: booked clamped residual remainder]"
+            self.log.append(
+                f"{step}: pool {pool!r} lost -> forced replan {name} "
+                f"codec={d.codec} cut={d.cut}{note}")
+        if not affected:
+            self.log.append(
+                f"{step}: pool {pool!r} lost; no admitted plan touched it")
+        return decisions
+
     def arbitrate(self, step: int, offered: Mapping[str, float]
                   ) -> Dict[str, OffloadDecision]:
         """ONE fleet-batched control pass: collect every admitted
@@ -357,8 +450,19 @@ class FleetOrchestrator:
     tenant's elastic sizing step — the standalone run-loop order, fleet
     synchronized."""
 
-    def __init__(self, cluster) -> None:
-        self.cluster = ClusterSpec.of(cluster)
+    def __init__(self, cluster=None, membership=None) -> None:
+        if (cluster is None) == (membership is None):
+            raise ValueError("FleetOrchestrator takes exactly one of "
+                             "cluster= (static) or membership= (live "
+                             "MembershipDirectory)")
+        self.membership = membership
+        # the fleet drains topology events CENTRALLY (one subscription,
+        # one ledger scrub, one forced-replan pass) — tenant jobs get
+        # static spec snapshots, not their own subscriptions
+        self._topo_sub = (membership.subscribe()
+                          if membership is not None else None)
+        self.cluster = ClusterSpec.of(
+            membership.spec if membership is not None else cluster)
         self.scheduler = FleetScheduler(self.cluster)
         self.orchestrators: Dict[str, Orchestrator] = {}
         # queued tenants waiting for capacity: name -> (spec, orch, seed)
@@ -372,6 +476,11 @@ class FleetOrchestrator:
         fleet's). Admitted jobs are armed immediately (the admission
         decision IS the initial plan — taken once, through the job's own
         controller); rejected jobs queue for capacity."""
+        if job.membership is not None:
+            raise ValueError(
+                f"tenant {spec.name!r} job carries its own membership "
+                "directory; the fleet drains topology events centrally "
+                "— pass membership= to FleetOrchestrator instead")
         if job.cluster is None:
             job = replace(job, cluster=self.cluster, sla=spec.sla)
         elif ClusterSpec.of(job.cluster) is not self.cluster and \
@@ -392,6 +501,10 @@ class FleetOrchestrator:
     def _activate(self, admissions: List[AdmissionResult]) -> None:
         for res in admissions:
             spec, orch, seed = self._waiting.pop(res.name)
+            if self.membership is not None:
+                # the tenant may have queued under an older topology
+                # generation; align it with the spec it was admitted on
+                orch.set_cluster(self.cluster)
             orch.begin(spec.demand_rate, seed=seed, decision=res.decision)
             self.orchestrators[spec.name] = orch
 
@@ -415,6 +528,13 @@ class FleetOrchestrator:
         standalone ``rate_fn`` analogue); default is the measured rate.
         Returns the measured rates."""
         step = self.step
+        # membership churn first: a dead pool's ledger bookings, plans,
+        # and meshes must be scrubbed before any batch executes this
+        # round; joined capacity re-admits the queue before it steps
+        if self._topo_sub is not None:
+            self.membership.tick(step)
+            for ev in self._topo_sub.poll():
+                self._apply_topology_event(step, ev, rates or {})
         measured: Dict[str, float] = {}
         for name, orch in self.orchestrators.items():
             if name in batches:
@@ -433,6 +553,46 @@ class FleetOrchestrator:
                 orch.elastic_step(step, offered[name], measured[name])
         self.step += 1
         return measured
+
+    def _apply_topology_event(self, step: int, ev,
+                              offered: Mapping[str, float]) -> None:
+        """React to one membership event fleet-wide: the scheduler
+        scrubs the ledger and forces replans (pool loss) or re-drains
+        the queue (join); each affected tenant orchestrator rides the
+        involuntary checkpoint-rescale path before adopting its forced
+        decision; every orchestrator's candidate set moves to the new
+        topology generation."""
+        from repro.core import membership as ms
+        spec_now = self.membership.spec
+        self.cluster = spec_now
+        if ev.kind in (ms.POOL_FAILED, ms.POOL_LEFT):
+            lost = ev.subject
+            decisions = self.scheduler.pool_lost(lost, spec_now, step,
+                                                 offered)
+            for name, orch in self.orchestrators.items():
+                d = decisions.get(name)
+                orch.metrics.decisions.append(
+                    f"{step}:topology {ev.kind} {lost} v{ev.version}"
+                    + (" [in plan]" if d is not None else ""))
+                if d is not None and \
+                        lost in set(orch._exec_assignment.values()):
+                    plan = orch.elastic.involuntary(
+                        step, reason=f"pool {lost} {ev.kind}")
+                    orch._apply_rescale(step, plan)
+                orch.set_cluster(spec_now)
+                if d is not None:
+                    orch.apply_decision(step, d)
+        elif ev.kind == ms.POOL_JOINED:
+            for orch in self.orchestrators.values():
+                orch.metrics.decisions.append(
+                    f"{step}:topology pool_joined {ev.subject} "
+                    f"v{ev.version}")
+                orch.set_cluster(spec_now)
+            self._activate(self.scheduler.pool_joined(spec_now))
+        elif ev.kind == ms.LINK_UPDATE:
+            self.scheduler.ledger.set_spec(spec_now)
+            for orch in self.orchestrators.values():
+                orch.set_cluster(spec_now)
 
     def finish(self) -> Dict[str, JobMetrics]:
         """Finalize all still-admitted tenants (does not release their

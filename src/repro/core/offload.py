@@ -39,7 +39,8 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.core.costmodel import (ClusterSpec, OperatorCost, PipelinePlan,
                                   ResourcesLike)
-from repro.core.placement import Objective, place, place_frontier
+from repro.core.placement import (Objective, place, place_frontier,
+                                  stale_pools)
 from repro.core.sla import SLA, SLATracker
 from repro.core.sla import codec_candidates as sla_codec_candidates
 
@@ -104,8 +105,10 @@ class OffloadController:
         this with a *residual* :class:`ClusterSpec` (the shared cluster
         minus other tenants' reservations) before every fleet-arbitrated
         replan, so a tenant controller prices exactly what is left for
-        it. Pool names/kinds must be stable across swaps — a residual
-        spec derived from the same cluster always is."""
+        it. Membership churn may also swap in a spec that DROPS a pool
+        the incumbent plan uses: :meth:`wants_replan` then fires
+        ``pool_lost`` unconditionally and :meth:`hold_decision` refuses,
+        so the stale plan can never be silently held."""
         self.resources = ClusterSpec.of(resources)
         self._edge_pools = {r.name for r in self.resources.edge_pools}
 
@@ -212,6 +215,11 @@ class OffloadController:
         of letting every tenant replan the moment it fires."""
         if not self.history:
             return "initial"
+        if stale_pools(self.assignment, self.resources):
+            # membership churn removed a pool the incumbent plan still
+            # references: replan unconditionally — no band or cooldown
+            # gate may hold a plan whose pool no longer exists
+            return "pool_lost"
         out_of_band = (rate > self.planned_rate * self.headroom
                        or rate < self.planned_rate / self.headroom)
         sla_bad = sla is not None and not sla.ok()
@@ -223,7 +231,14 @@ class OffloadController:
 
     def hold_decision(self, step: int, rate: float) -> OffloadDecision:
         """The no-change decision (not appended to history, matching the
-        historical observe() hold path)."""
+        historical observe() hold path). Raises when the incumbent plan
+        references a pool that left the topology — holding such a plan
+        would execute ops on a pool that no longer exists."""
+        stale = stale_pools(self.assignment, self.resources)
+        if stale:
+            raise ValueError(
+                f"cannot hold a plan placed on departed pool(s) {stale}: "
+                "the topology no longer contains them; replan first")
         return OffloadDecision(step, rate, self.cut, "hold",
                                self.history[-1].plan, self.frontier,
                                dict(self.assignment), self.codec)

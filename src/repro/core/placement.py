@@ -74,15 +74,30 @@ def edge_cloud_pools(resources: ResourcesLike
         This is the thin back-compat shim for the flat two-pool world:
         it collapses a :class:`ClusterSpec` (or legacy resource dict) to
         the *first* pool of each kind, ignoring any further pools and
-        their links. New code should pass a ``ClusterSpec`` to
-        :func:`place_frontier`, which places across every pool. The shim
-        keeps prefix-cut call sites and the PR 2/3 parity tests working
-        unchanged.
+        their links — calling it emits a ``DeprecationWarning``. New
+        code should pass a ``ClusterSpec`` to :func:`place_frontier`,
+        which places across every pool. The prefix-cut engine
+        (:func:`place`/:func:`prefix_cut_plans`) still collapses through
+        the same rule internally (it IS the two-pool engine) without
+        warning on every replan.
 
     Raises a clear ``ValueError`` when either kind is missing — instead
     of the bare ``StopIteration`` a ``next()`` over an ill-formed
     resource dict used to surface.
     """
+    import warnings
+    warnings.warn(
+        "edge_cloud_pools is the deprecated two-pool shim: it collapses "
+        "the topology to the FIRST pool of each kind, ignoring further "
+        "pools and their links; pass the ClusterSpec to place_frontier "
+        "instead", DeprecationWarning, stacklevel=2)
+    return _first_edge_cloud(resources)
+
+
+def _first_edge_cloud(resources: ResourcesLike
+                      ) -> Tuple[Resource, Resource]:
+    """The collapse rule behind :func:`edge_cloud_pools`, warning-free
+    for the prefix-cut engine's own use."""
     spec = ClusterSpec.of(resources)
     edges, clouds = spec.edge_pools, spec.cloud_pools
     if not edges or not clouds:
@@ -93,12 +108,22 @@ def edge_cloud_pools(resources: ResourcesLike
     return edges[0], clouds[0]
 
 
+def stale_pools(assignment: Dict[str, str], resources: ResourcesLike
+                ) -> List[str]:
+    """The pools ``assignment`` references that no longer exist in
+    ``resources`` (sorted). Non-empty means membership churn removed a
+    pool out from under the plan — the controller must replan (and may
+    never silently hold) before the next batch executes."""
+    spec = ClusterSpec.of(resources)
+    return sorted({p for p in assignment.values() if p not in spec.pools})
+
+
 def prefix_cut_plans(ops: List[OperatorCost], resources: ResourcesLike,
                      rate: float):
     """All plans of the form: stages[:k] on edge, stages[k:] on cloud.
-    Two-pool only (first pool of each kind via the deprecated
-    :func:`edge_cloud_pools` shim)."""
-    edge, cloud = edge_cloud_pools(resources)
+    Two-pool only (first pool of each kind, the deprecated
+    :func:`edge_cloud_pools` collapse rule)."""
+    edge, cloud = _first_edge_cloud(resources)
     for k in range(len(ops) + 1):
         assign = {op.name: (edge.name if i < k else cloud.name)
                   for i, op in enumerate(ops)}
@@ -118,7 +143,7 @@ def place(ops: List[OperatorCost], resources: ResourcesLike,
     if best is None or not best.feasible:
         # all-cloud fallback (always structurally valid; may still be
         # infeasible under extreme rates — caller must check .feasible)
-        _, cloud = edge_cloud_pools(resources)
+        _, cloud = _first_edge_cloud(resources)
         assign = {op.name: cloud.name for op in ops}
         best = evaluate_plan(ops, assign, resources, rate)
         best_k = 0

@@ -124,7 +124,7 @@ def rescale_cycle(directory, step: int, tree, axes_tree, rules: dict,
 
 @dataclass(frozen=True)
 class ScalePlan:
-    action: str              # "hold" | "grow" | "shrink"
+    action: str              # "hold" | "grow" | "shrink" | "recover"
     workers: int             # target data-parallel worker count
     reason: str
     # a grow/shrink that is not an even re-partition of the old layout
@@ -195,6 +195,25 @@ class ElasticController:
     def _act(self, step: int, new_workers: int, reason: str) -> ScalePlan:
         plan = plan_reshard(self.workers, new_workers, reason=reason)
         self.workers = new_workers
+        self._over = self._under = 0
+        self._last_action_step = step
+        self.rescales += 1
+        return plan
+
+    def involuntary(self, step: int, reason: str,
+                    workers: Optional[int] = None) -> ScalePlan:
+        """An involuntary rescale — pool loss / failure recovery. The
+        trigger is a topology FACT, not a rate sample, so it bypasses
+        the patience/cooldown hysteresis entirely and always rounds
+        through the checkpoint cycle (the surviving mesh layout is not
+        an even re-partition of one that included the dead pool's
+        share). Resets the rate streaks and starts the cooldown clock,
+        so the next voluntary action still waits out hysteresis."""
+        new = self.workers if workers is None else \
+            max(self.min_workers, min(int(workers), self.max_workers))
+        plan = ScalePlan("recover", new, reason,
+                         needs_checkpoint_cycle=True)
+        self.workers = new
         self._over = self._under = 0
         self._last_action_step = step
         self.rescales += 1

@@ -390,3 +390,79 @@ def test_fleet_rejects_mismatched_job_cluster():
     with pytest.raises(ValueError, match="different cluster"):
         fleet.add_tenant(TenantSpec("x", sla=LOOSE),
                          StreamJob("x", dim=8, sla=LOOSE, cluster=other))
+
+
+# ---------------------------------------------------------------------------
+# queue re-admission ordering (drain_queue)
+# ---------------------------------------------------------------------------
+
+def _queue_three(sched, spec, rate):
+    """Queue three tenants — a premium one submitted LAST and two
+    standard ones in FIFO order — behind a full link."""
+    for name, prio in [("std1", 1), ("std2", 1), ("prem", 0)]:
+        res = sched.submit(TenantSpec(name, priority=prio, sla=LOOSE,
+                                      demand_rate=rate),
+                           make_controller(spec))
+        assert not res.admitted and res.queued
+    assert sched.queued == ["std1", "std2", "prem"]
+
+
+def test_drain_queue_priority_then_fifo_after_departure():
+    """drain_queue re-admits in priority order, FIFO within a tier: the
+    late-arriving premium tenant jumps the queue, and among equal-tier
+    tenants arrival order decides."""
+    spec, rate = _one_tenant_link_spec()
+    sched = FleetScheduler(spec)
+    a = sched.submit(TenantSpec("a", sla=LOOSE, demand_rate=rate),
+                     make_controller(spec))
+    assert a.admitted
+    _queue_three(sched, spec, rate)
+    # one slot frees; exactly one re-admission — the premium tier wins
+    out = sched.leave("a")
+    assert [(r.name, r.admitted) for r in out] == [("prem", True)]
+    assert sched.queued == ["std1", "std2"]  # FIFO order preserved
+    # next slot goes to the older standard tenant
+    out = sched.leave("prem")
+    assert [r.name for r in out] == ["std1"]
+    assert sched.queued == ["std2"]
+    assert sched.ledger.check() == []
+
+
+def test_drain_queue_priority_then_fifo_after_membership_join():
+    """The same ordering contract when the capacity arrives as a
+    membership POOL_JOINED event: the round's event drain re-admits
+    the premium tenant before the standard ones, FIFO within a tier.
+    Queued tenants are DAG jobs — linear pipelines collapse to the
+    first edge pool and could never use a joiner."""
+    from repro.core.membership import MembershipDirectory
+
+    d = MembershipDirectory(two_pool_spec(bw=2e6, latency=20e-3))
+    fleet = FleetOrchestrator(membership=d)
+    a = fleet.add_tenant(TenantSpec("a", sla=LOOSE, demand_rate=1e4),
+                         StreamJob("a", dim=8, sla=LOOSE), seed=0)
+    assert a.admitted
+    for i, (name, prio) in enumerate([("std1", 1), ("std2", 1),
+                                      ("prem", 0)]):
+        res = fleet.add_tenant(
+            TenantSpec(name, priority=prio, sla=LOOSE, demand_rate=1e6),
+            StreamJob(name, dim=8, sla=LOOSE,
+                      pipeline=pl.fanout_stream_graph(8)), seed=i + 1)
+        assert not res.admitted and res.queued
+    assert fleet.scheduler.queued == ["std1", "std2", "prem"]
+    # a fat pool joins; next round's drain re-attempts the queue in
+    # tier-then-FIFO order (admissions land in that order)
+    d.register(cm.Resource("edge_big", "edge", chips=4, flops=8e12,
+                           mem_bw=200e9, mem_cap=16e9, net_bw=10e9,
+                           net_latency=2e-3),
+               links=[cm.Link("edge_big", "cloud", bw=1e9, latency=2e-3)],
+               now=1, monitored=False)
+    gen = HyperplaneStream(dim=8, seed=9, horizon=2 * 32.0)
+    fleet.step_round({"a": gen.batch(0, 32)}, rates={"a": 1e4})
+    re_admitted = [n for n in fleet.scheduler.admitted if n != "a"]
+    assert re_admitted and re_admitted[0] == "prem"
+    assert re_admitted == sorted(
+        re_admitted, key=lambda n: (0 if n == "prem" else 1, n))
+    # anyone still waiting kept FIFO order
+    assert fleet.scheduler.queued == [
+        n for n in ["std1", "std2"] if n not in re_admitted]
+    assert fleet.scheduler.ledger.check() == []

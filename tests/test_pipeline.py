@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from repro.core import costmodel as cm
 from repro.core import pipeline as pl
 from repro.core.orchestrator import Orchestrator, StreamJob
-from repro.core.placement import edge_cloud_pools, place
+from repro.core.placement import _first_edge_cloud, place
 from repro.streams.events import StreamBatch
 from repro.streams.fusion import WindowJoin
 from repro.streams.generators import DriftSpec, HyperplaneStream
@@ -114,7 +114,8 @@ def test_placement_takes_first_pool_of_each_kind():
     cloud2 = cm.Resource("cloud2", "cloud", chips=2)
     res = {"edge": cm.EDGE_NODE, "edge2": edge2,
            "cloud": cm.CLOUD_POD, "cloud2": cloud2}
-    e, c = edge_cloud_pools(res)
+    # the warning-free collapse rule behind the deprecated shim
+    e, c = _first_edge_cloud(res)
     assert (e.name, c.name) == ("edge", "cloud")
     plan, _ = place(pl.standard_stream_pipeline(dim=8).costs(), res, 1e4)
     assert set(plan.assignment.values()) <= {"edge", "cloud"}
