@@ -569,6 +569,69 @@ def bench_serve_micro(rows, quick):
                  f"{th['decode_tok_per_s']:.0f} decode tok/s"))
 
 
+def bench_serve_prefill_edge_decode(rows, quick):
+    """DL-on-the-substrate path: the split serving graph (serve/ops) on
+    a topology where the saturated cloud pod forces the KV cache over
+    the downlink — the frontier DP must select cloud-prefill/edge-decode
+    and price the decode op's (params + KV) state against edge mem_cap."""
+    from repro.configs import get_config
+    from repro.core import costmodel as cm
+    from repro.core.placement import Objective, place_frontier
+    from repro.models import model_zoo as zoo
+    from repro.serve.engine import ServeEngine
+    from repro.serve.ops import serving_graph
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    eng = ServeEngine(cfg, zoo.init_params(cfg, 0), batch_size=2, max_len=32)
+    g = serving_graph(eng, prompt_len=24, max_new_tokens=4)
+    spec = cm.ClusterSpec(
+        pools=[cm.Resource("edge0", "edge", chips=1, flops=4e9, mem_bw=5e9,
+                           mem_cap=4e9, net_bw=1e9),
+               cm.Resource("cloud0", "cloud", chips=1, flops=1e13,
+                           mem_bw=2.5e9, mem_cap=64e9, net_bw=100e9)],
+        links=[cm.Link("edge0", "cloud0", bw=1e9, latency=5e-3),
+               cm.Link("cloud0", "edge0", bw=1e9, latency=5e-3)])
+    obj = Objective()
+    iters = 3 if quick else 10
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        plan, frontier = place_frontier(g, spec, 3e3, obj, method="dp")
+    us = (time.perf_counter() - t0) / iters * 1e6
+    split = (plan.assignment.get("prefill") == "cloud0"
+             and plan.assignment.get("decode") == "edge0")
+    kv_state = next(c.state_bytes for c in g.costs() if c.name == "decode")
+    rows.append(("serve_prefill_edge_decode", us,
+                 f"split={split} feasible={plan.feasible} "
+                 f"kv_state={kv_state / 1e3:.0f}KB "
+                 f"lat={plan.latency_s * 1e3:.1f}ms"))
+
+
+def bench_train_op_placed(rows, quick):
+    """Train-as-an-Op path: a zoo train step wrapped as a pipeline Op
+    (train/ops.dl_train_op) placed by the frontier DP — the roofline-
+    declared cost anchors it on the pod (edge_capable=False, full
+    params+opt state priced against mem_cap)."""
+    from repro.configs import get_config
+    from repro.core import costmodel as cm
+    from repro.core.pipeline import OpGraph
+    from repro.core.placement import Objective, place_frontier
+    from repro.train.ops import dl_train_op
+    from repro.train.optim import adamw
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    op = dl_train_op(cfg, adamw(1e-3), batch_size=4, seq_len=64)
+    g = OpGraph([op])
+    spec = cm.ClusterSpec(pools=[cm.EDGE_NODE, cm.CLOUD_POD])
+    obj = Objective()
+    iters = 3 if quick else 10
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        plan, frontier = place_frontier(g, spec, 1e3, obj, method="dp")
+    us = (time.perf_counter() - t0) / iters * 1e6
+    rows.append(("train_op_placed", us,
+                 f"pool={plan.assignment.get(op.name)} "
+                 f"state={op.cost.state_bytes / 1e6:.2f}MB "
+                 f"flops/ev={op.cost.flops_per_event:.3g}"))
+
+
 def bench_fleet(rows, quick):
     """Multi-tenant fleet control path (core/fleet): admission probes
     per second, one fleet-batched arbitration pass over triggered
@@ -745,6 +808,7 @@ ALL_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                bench_dag_place_dp,
                bench_adaptive_codec_replan, bench_uplink_codec,
                bench_fusion_join, bench_fleet, bench_membership,
+               bench_serve_prefill_edge_decode, bench_train_op_placed,
                bench_s4_feature_matrix, bench_generators, bench_sketches,
                bench_kernel_dispatch,
                bench_train_micro, bench_serve_micro, bench_roofline_summary]
@@ -759,6 +823,7 @@ SMOKE_BENCHES = [bench_s1_throughput_scaling, bench_s2_update_latency,
                  bench_dag_place_dp,
                  bench_adaptive_codec_replan, bench_uplink_codec,
                  bench_fusion_join, bench_fleet, bench_membership,
+                 bench_serve_prefill_edge_decode, bench_train_op_placed,
                  bench_s4_feature_matrix, bench_generators, bench_sketches,
                  bench_kernel_dispatch]
 

@@ -198,21 +198,27 @@ class ClusterSpec(Mapping):
 
     def with_uplink_codec(self, codec: str,
                           override: bool = False) -> "ClusterSpec":
-        """A copy of this spec with ``codec`` attached to edge->cloud
-        uplinks (declared links keep their bw/latency; missing uplinks
-        are materialized from the derived defaults). This is how the
-        SLA-chosen codec is attached to the topology.
+        """A copy of this spec with ``codec`` attached to every
+        edge<->cloud wire — the edge->cloud uplink AND the cloud->edge
+        downlink, which carries ``downlink_ok`` traffic (the KV cache of
+        a cloud-prefill/edge-decode split) and must price the same codec
+        the runtime wire round-trip applies on that crossing. Declared
+        links keep their bw/latency; missing ones are materialized from
+        the derived defaults. This is how the SLA-chosen codec is
+        attached to the topology. Edge<->edge and cloud<->cloud links
+        are never touched.
 
-        By default only uplinks that don't already declare a lossy codec
+        By default only links that don't already declare a lossy codec
         are rewritten — a user's per-link codec declaration wins over
         the blanket choice; pass ``override=True`` to replace those too.
         """
         links = dict(self._links)
         for e in self.edge_pools:
             for c in self.cloud_pools:
-                ln = self.link(e.name, c.name)
-                if override or ln.codec == "identity":
-                    links[(e.name, c.name)] = replace(ln, codec=codec)
+                for src, dst in ((e.name, c.name), (c.name, e.name)):
+                    ln = self.link(src, dst)
+                    if override or ln.codec == "identity":
+                        links[(src, dst)] = replace(ln, codec=codec)
         return ClusterSpec(self.pools, links.values(), version=self.version)
 
     def without_pool(self, name: str) -> "ClusterSpec":
@@ -314,6 +320,13 @@ class OperatorCost:
     out_bytes_per_event: float      # bytes emitted downstream
     state_bytes: float = 0.0        # resident state
     edge_capable: bool = True       # some stages (full DL train) are not
+    # True -> this op may consume a cloud-resident producer from an edge
+    # pool: the cloud->edge crossing is priced as a normal (costed) link
+    # hop instead of being marked infeasible backhaul. This is a semantic
+    # declaration like edge_capable — a decode op explicitly designed to
+    # receive its KV-cache over the downlink (cloud-prefill/edge-decode)
+    # sets it; stream analytics ops never should.
+    downlink_ok: bool = False
 
 
 def stage_time(op: OperatorCost, res: Resource, rate: float) -> float:
@@ -427,6 +440,48 @@ def _finalize_capacity(plan: PipelinePlan) -> PipelinePlan:
     return plan
 
 
+@dataclass(frozen=True)
+class MigrationCost:
+    """The one-shot price of moving resident op state at replan time."""
+    seconds: float = 0.0
+    bytes: float = 0.0
+    moves: Tuple[Tuple[str, str, str], ...] = ()   # (op, src pool, dst pool)
+
+
+def migration_cost(ops: List[OperatorCost],
+                   old_assign: Mapping, new_assign: Mapping,
+                   resources: ResourcesLike) -> MigrationCost:
+    """Price the state transfer a plan change implies: every op whose pool
+    changed ships its ``state_bytes`` over the old->new :class:`Link`
+    (plus one link-latency hop per moved op). State moves *raw* — learner
+    params/opt-state and KV caches must arrive bit-exact, so the link's
+    lossy stream codec does not apply to migration traffic.
+
+    Ops present in only one of the two assignments (a job being admitted
+    or drained) move no state. A move *off a pool that has already left
+    the spec* (crash/deregistration replans) is recorded but priced at
+    zero wire cost: there is nothing left to ship — the op restarts from
+    checkpoint at the destination. The offload controller attaches this
+    to every repartition decision so a migration's amortization against
+    the steady-state win is visible, not implicit."""
+    spec = ClusterSpec.of(resources)
+    seconds = 0.0
+    total = 0.0
+    moves: List[Tuple[str, str, str]] = []
+    for op in ops:
+        src = old_assign.get(op.name)
+        dst = new_assign.get(op.name)
+        if src is None or dst is None or src == dst:
+            continue
+        moves.append((op.name, src, dst))
+        if src not in spec.pools or dst not in spec.pools:
+            continue
+        ln = spec.link(src, dst)
+        total += op.state_bytes
+        seconds += op.state_bytes / ln.bw + ln.latency
+    return MigrationCost(seconds, total, tuple(moves))
+
+
 def evaluate_graph_plan(ops: List[OperatorCost],
                         edges: Sequence[Tuple[str, str]],
                         assign: Dict[str, str],
@@ -464,10 +519,14 @@ def evaluate_graph_plan(ops: List[OperatorCost],
     Backhaul is not a supported data path: a flow edge from a cloud pool
     down to an edge pool (routing a high-rate stream back over the
     constrained link so a *slower* node can consume it) marks the plan
-    infeasible. The edge-resident set of any feasible assignment is
-    therefore downward-closed, which is what makes the frontier search
-    (over frontiers x within-kind pool choices) provably complete
-    against the exhaustive oracle.
+    infeasible — unless the consumer declares
+    ``OperatorCost.downlink_ok``, in which case the crossing is a
+    legitimate *downlink* (cloud-prefill/edge-decode serving) and is
+    priced like any other hop. The edge-resident set of any feasible
+    assignment is therefore downward-closed under the graph's *closure*
+    relation (flow parents of downlink-ok consumers excluded), which is
+    what makes the frontier search (over frontiers x within-kind pool
+    choices) provably complete against the exhaustive oracle.
     """
     spec = ClusterSpec.of(resources)
     if source is None:
@@ -512,12 +571,19 @@ def evaluate_graph_plan(ops: List[OperatorCost],
             source_hop[rname] = spec.link(source, rname).latency
     crossings = sorted({(p, assign[c]) for p, c in edges
                         if assign[p] != assign[c]})
+    # a cloud->edge flow crossing is backhaul (infeasible) unless the
+    # CONSUMER declares downlink_ok — then it is a legitimate downlink
+    # (cloud-prefill/edge-decode) and prices like any other hop below
+    backhaul = sorted({(p, assign[c]) for p, c in edges
+                       if assign[p] != assign[c]
+                       and spec.pools[assign[p]].kind == "cloud"
+                       and spec.pools[assign[c]].kind == "edge"
+                       and not by_name[c].downlink_ok})
+    for p, rname in backhaul:
+        plan.feasible = False
+        plan.notes.append(f"backhaul {p}->{rname} (cloud->edge) "
+                          "not supported")
     for p, rname in crossings:
-        rp, rc = spec.pools[assign[p]], spec.pools[rname]
-        if rp.kind == "cloud" and rc.kind == "edge":
-            plan.feasible = False
-            plan.notes.append(f"backhaul {p}->{rname} (cloud->edge) "
-                              "not supported")
         ship(assign[p], rname, by_name[p].out_bytes_per_event)
     # -- latency: critical path over (node compute + crossing-link hops).
     # ops is in topological order, so one forward sweep suffices.

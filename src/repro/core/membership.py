@@ -15,11 +15,12 @@ The :class:`MembershipDirectory` owns the authoritative, **versioned**
   directory clock or :meth:`tick` expires it (``pool_failed``). The
   clock is the deterministic simulation step the orchestrator already
   counts — never wall time — so failure scenarios replay bitwise;
-* a **latency-probe table** rewrites each :class:`Link`'s latency from
-  observed samples via EWMA (:meth:`observe_latency`), turning the
-  hand-declared latency matrix into a data-driven one. Announcements
-  (``link_update`` events) are hysteresis-gated by a relative tolerance
-  so consumers re-price on real shifts, not probe noise.
+* a **probe table** rewrites each :class:`Link`'s latency
+  (:meth:`observe_latency`) and bandwidth (:meth:`observe_bandwidth`)
+  from observed samples via EWMA, turning the hand-declared link matrix
+  into a data-driven one. Announcements (``link_update`` events) are
+  hysteresis-gated by a relative tolerance so consumers re-price on
+  real shifts, not probe noise.
 
 Every mutation bumps ``version`` and appends a typed
 :class:`TopologyEvent`; consumers (:class:`~repro.core.orchestrator.
@@ -136,6 +137,9 @@ class MembershipDirectory:
         # hysteresis reference)
         self._ewma: Dict[Tuple[str, str], float] = {}
         self._announced: Dict[Tuple[str, str], float] = {}
+        # bandwidth-probe twin of the latency table (observe_bandwidth)
+        self._bw_ewma: Dict[Tuple[str, str], float] = {}
+        self._bw_announced: Dict[Tuple[str, str], float] = {}
         self.events: List[TopologyEvent] = []
         self._spec_cache: Optional[ClusterSpec] = None
 
@@ -195,6 +199,9 @@ class MembershipDirectory:
         for key in [k for k in self._ewma if name in k]:
             self._ewma.pop(key)
             self._announced.pop(key, None)
+        for key in [k for k in self._bw_ewma if name in k]:
+            self._bw_ewma.pop(key)
+            self._bw_announced.pop(key, None)
 
     # -- membership mutations ----------------------------------------------
     def register(self, resource: Resource, links: Iterable[Link] = (),
@@ -325,9 +332,53 @@ class MembershipDirectory:
             return self.events[-1]
         return None
 
+    def observe_bandwidth(self, src: str, dst: str, sample_bps: float,
+                          now: Optional[int] = None
+                          ) -> Optional[TopologyEvent]:
+        """Feed one observed throughput sample (bytes/s) for
+        ``src -> dst`` — the bandwidth twin of :meth:`observe_latency`.
+        The EWMA estimate rewrites the link's ``bw`` in the spec (so the
+        placement DP and :func:`~repro.core.costmodel.migration_cost`
+        price wire time against measured, not declared, capacity); a
+        ``link_update`` event is announced only when the estimate moved
+        more than ``latency_tol`` (relative) from the last announced
+        value. Returns the event, if any."""
+        self._advance(now)
+        for end in (src, dst):
+            if end not in self._pools:
+                raise ValueError(
+                    f"observe_bandwidth {src}->{dst}: unknown pool "
+                    f"{end!r} (known pools: {sorted(self._pools)})")
+        if sample_bps <= 0.0:
+            raise ValueError(
+                f"observe_bandwidth: non-positive sample {sample_bps}")
+        key = (src, dst)
+        ln = self._links.get(key) or self.spec.link(src, dst)
+        prev = self._bw_ewma.get(key, ln.bw)
+        est = self.ewma_alpha * float(sample_bps) \
+            + (1.0 - self.ewma_alpha) * prev
+        self._bw_ewma[key] = est
+        self._links[key] = replace(ln, bw=est)
+        # the spec must always carry the freshest estimate, even when
+        # the move is below the announcement dead band
+        self._version += 1
+        self._spec_cache = None
+        ref = self._bw_announced.get(key, ln.bw)
+        if abs(est - ref) > self.latency_tol * max(ref, 1e-12):
+            self._bw_announced[key] = est
+            self.events.append(TopologyEvent(
+                LINK_UPDATE, f"{src}->{dst}", self._version, self.clock,
+                f"bw {ref / 1e6:.3g}MB/s -> {est / 1e6:.3g}MB/s"))
+            return self.events[-1]
+        return None
+
     def probe_estimate(self, src: str, dst: str) -> Optional[float]:
         """The current EWMA latency estimate, or None if never probed."""
         return self._ewma.get((src, dst))
+
+    def bandwidth_estimate(self, src: str, dst: str) -> Optional[float]:
+        """The current EWMA bandwidth estimate, or None if never probed."""
+        return self._bw_ewma.get((src, dst))
 
     def __repr__(self) -> str:
         return (f"MembershipDirectory(v{self._version}, t={self.clock}, "

@@ -37,8 +37,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
-from repro.core.costmodel import (ClusterSpec, OperatorCost, PipelinePlan,
-                                  ResourcesLike)
+from repro.core.costmodel import (ClusterSpec, MigrationCost, OperatorCost,
+                                  PipelinePlan, ResourcesLike,
+                                  migration_cost)
 from repro.core.placement import (Objective, place, place_frontier,
                                   stale_pools)
 from repro.core.sla import SLA, SLATracker
@@ -55,6 +56,11 @@ class OffloadDecision:
     frontier: FrozenSet[str] = frozenset()   # op names on any edge pool
     assignment: Dict[str, str] = field(default_factory=dict)
     codec: str = "identity"                  # uplink codec in force
+    # the one-shot price of adopting this decision from the previous
+    # plan: every moved op ships its resident state_bytes (raw — state
+    # never takes the lossy codec) over the old->new link. Empty for
+    # holds, initial plans, and codec-only swaps.
+    migration: MigrationCost = field(default_factory=MigrationCost)
 
 
 @dataclass
@@ -260,6 +266,7 @@ class OffloadController:
             reason = ("sla" if sla is not None and not sla.ok() else
                       "rate_up" if rate > self.planned_rate else "rate_down")
         old_identity = self._identity(self.assignment, self.codec)
+        old_assign = dict(self.assignment)
         if self._adaptive and \
                 step - self._last_codec_change >= self.codec_cooldown:
             plan, frontier = self._replan_codecs(rate, sla)
@@ -269,12 +276,18 @@ class OffloadController:
         if new_codec != self.codec:
             self.codec = new_codec
             self._last_codec_change = step
+        mig = MigrationCost()
         if self._identity(plan.assignment, self.codec) != old_identity:
             self._last_change = step
+            # price the state move this adoption implies (ops whose pool
+            # changed ship their resident bytes over the old->new link)
+            mig = migration_cost(self.ops, old_assign, plan.assignment,
+                                 self.resources)
         self.planned_rate, self.frontier = rate, frontier
         self.assignment = dict(plan.assignment)
         self.cut = len(frontier)
         d = self._decide(step, rate, reason, plan, frontier)
+        d.migration = mig
         self.history.append(d)
         return d
 

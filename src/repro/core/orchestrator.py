@@ -91,6 +91,12 @@ class StreamJob:
     max_workers: int = 16
     # where elastic rescale cycles publish checkpoints; None -> a tempdir
     ckpt_dir: Optional[str] = None
+    # explicit codec ladder for SLA admission and rate-adaptive replans
+    # (names resolvable by core/codecs.get_codec). None -> the default
+    # gradient ladder (DEFAULT_CODECS). A serving job passes the KV
+    # ladder (identity / kv_int8 / kv_latent) here so the controller's
+    # escalate/de-escalate loop governs KV-cache compression
+    uplink_codecs: Optional[List[str]] = None
 
 
 @dataclass
@@ -150,9 +156,12 @@ class Orchestrator:
         # rate-adaptive replans re-derive per-candidate specs from it
         # (user-declared per-link codecs always win over the blanket)
         self._base_cluster = spec
-        self.codec = pick_codec(job.sla)
-        self.cluster = spec.with_uplink_codec(self.codec.name)
         from repro.core.codecs import get_codec
+        self._codec_ladder = (
+            [get_codec(n) for n in job.uplink_codecs]
+            if job.uplink_codecs is not None else None)
+        self.codec = pick_codec(job.sla, candidates=self._codec_ladder)
+        self.cluster = spec.with_uplink_codec(self.codec.name)
         for e in self.cluster.edge_pools:
             for c in self.cluster.cloud_pools:
                 ln = self.cluster.link(e.name, c.name)
@@ -176,7 +185,9 @@ class Orchestrator:
         # controller re-runs admission against windowed SLA telemetry on
         # each replan event and may migrate the codec (a zero budget
         # leaves exactly [identity] — the codec is then pinned)
-        self.codec_candidates = [c.name for c in codec_candidates(job.sla)]
+        self.codec_candidates = [
+            c.name for c in codec_candidates(
+                job.sla, candidates=self._codec_ladder)]
         self.controller = OffloadController(
             self.ops, self._base_cluster, job.objective,
             graph=self.pipeline if self.is_graph else None,
@@ -184,9 +195,9 @@ class Orchestrator:
             codec_candidates=self.codec_candidates)
         self.sla = SLATracker(job.sla, window=job.sla_window)
         # error-feedback residuals for the lossy uplink codec, keyed by
-        # batch channel (carried across steps so accumulated error stays
-        # within the codec's admitted bound)
-        self._uplink_residuals: Dict[str, object] = {}
+        # (batch channel, pytree leaf index) — carried across steps so
+        # accumulated error stays within the codec's admitted bound
+        self._uplink_residuals: Dict[tuple, object] = {}
         self.elastic = elastic.ElasticController(workers=job.workers,
                                                  max_workers=job.max_workers)
         self.states = self.pipeline.init_states()
@@ -198,27 +209,40 @@ class Orchestrator:
     # -- uplink codec: the wire transform between segments ------------------
     def _uplink_fn(self):
         """The batch transform applied where data crosses the edge->cloud
-        uplink, or None for a lossless (identity) codec. Float channels
-        round-trip the codec with per-channel error-feedback residuals;
-        integer/bool/PRNG channels cross uncompressed."""
+        uplink (or the cloud->edge downlink of a ``downlink_ok`` split),
+        or None for a lossless (identity) codec. Channels are arbitrary
+        pytrees — a flat feature array or a whole KV-cache tree — and
+        every float leaf round-trips the codec with its own error-
+        feedback residual (keyed by ``(channel, leaf index)``); integer/
+        bool/PRNG leaves cross uncompressed."""
         if self.codec.lossless:
             return None
 
         def uplink(env):
             out = dict(env)
             for k, v in env.items():
-                if k == "rng" or not jnp.issubdtype(
-                        jnp.asarray(v).dtype, jnp.floating):
+                if k == "rng":
                     continue
-                r = self._uplink_residuals.get(k)
-                if r is None or np.shape(r) != jnp.shape(v):
-                    r = self.codec.init_residual(v)
-                # residuals live on host (numpy): elastic rescales can
-                # move op state to a different mesh between steps, and an
-                # uncommitted carry follows the batch's devices
-                dec, r = self.codec.roundtrip(jnp.asarray(np.asarray(r)), v)
-                self._uplink_residuals[k] = np.asarray(r)
-                out[k] = dec
+                leaves, treedef = jax.tree_util.tree_flatten(v)
+                changed = False
+                for i, leaf in enumerate(leaves):
+                    if not jnp.issubdtype(jnp.result_type(leaf),
+                                          jnp.floating):
+                        continue
+                    r = self._uplink_residuals.get((k, i))
+                    if r is None or np.shape(r) != jnp.shape(leaf):
+                        r = self.codec.init_residual(leaf)
+                    # residuals live on host (numpy): elastic rescales
+                    # can move op state to a different mesh between
+                    # steps, and an uncommitted carry follows the
+                    # batch's devices
+                    dec, r = self.codec.roundtrip(
+                        jnp.asarray(np.asarray(r)), leaf)
+                    self._uplink_residuals[(k, i)] = np.asarray(r)
+                    leaves[i] = dec
+                    changed = True
+                if changed:
+                    out[k] = jax.tree_util.tree_unflatten(treedef, leaves)
             return out
 
         return uplink

@@ -79,6 +79,14 @@ class Op:
     ``on_drift`` (optional) maps state -> state when the orchestrator's
     drift response fires; ``metrics`` (optional) maps state -> dict for
     the Output Interface at end of run.
+
+    ``jit=False`` marks a *host op*: the graph calls ``fn`` directly
+    instead of wrapping it in ``jax.jit``. This is how an op that
+    manages its own compiled executables composes into the graph — a
+    decode op looping over a serve engine's donated-buffer decode step
+    must reuse that exact executable to stay bitwise-identical to the
+    standalone engine (and to keep buffer donation legal). Host ops are
+    only valid under ``fuse="op"``.
     """
     name: str
     fn: StepFn
@@ -89,6 +97,7 @@ class Op:
     reads: Optional[Tuple[str, ...]] = None
     writes: Optional[Tuple[str, ...]] = None
     deletes: Tuple[str, ...] = ()
+    jit: bool = True
 
     def __post_init__(self):
         for f in ("reads", "writes", "deletes"):
@@ -125,6 +134,13 @@ class OpGraph:
             raise ValueError(f"duplicate op names: {names}")
         if fuse not in ("op", "xla"):
             raise ValueError(f"fuse mode {fuse!r} not in ('op', 'xla')")
+        if fuse == "xla":
+            host = [op.name for op in ops if not op.jit]
+            if host:
+                raise ValueError(
+                    f"fuse='xla' cannot fuse host ops (jit=False): {host}; "
+                    "host ops manage their own executables and only "
+                    "compose under fuse='op'")
         self.ops = ops
         self.fuse = fuse
         self._segments: Dict[tuple, Callable] = {}   # (idxs, sig) -> fn
@@ -146,6 +162,7 @@ class OpGraph:
                 f"on: {undeclared} (use Pipeline for undeclared linear "
                 f"chains)")
         parents: List[set] = [set() for _ in self.ops]
+        flow_parents: List[set] = [set() for _ in self.ops]
         flow: set = set()
         last_writer: Dict[str, int] = {}
         readers: Dict[str, set] = {}
@@ -171,6 +188,7 @@ class OpGraph:
                         source_consumers.append(op.name)
                 else:
                     parents[j].add(i)
+                    flow_parents[j].add(i)
                     flow.add((i, j))
                 readers.setdefault(k, set()).add(j)
             for k in op.writes + op.deletes:
@@ -184,6 +202,18 @@ class OpGraph:
                 readers[k] = set()
         self._parents: Tuple[FrozenSet[int], ...] = tuple(
             frozenset(p) for p in parents)
+        # the *closure* relation frontier enumeration (and the placement
+        # DP) is downward-closed under: identical to the full hazard
+        # relation, except that a downlink-ok op drops its flow parents
+        # (its inputs may legitimately arrive over a cloud->edge
+        # downlink — the evaluator prices that crossing instead of
+        # forbidding it). Pure WAR/WAW hazard parents are kept. Graphs
+        # without downlink ops have closure == hazard parents, so every
+        # existing frontier family is unchanged.
+        self._closure: Tuple[FrozenSet[int], ...] = tuple(
+            frozenset(p - flow_parents[j])
+            if self.ops[j].cost.downlink_ok else frozenset(p)
+            for j, p in enumerate(parents))
         self._flow_pairs: Tuple[Tuple[int, int], ...] = tuple(sorted(flow))
         self.flow_edges: Tuple[Tuple[str, str], ...] = tuple(sorted(
             (self.ops[i].name, self.ops[j].name) for i, j in flow))
@@ -207,11 +237,22 @@ class OpGraph:
     @property
     def hazard_parent_indices(self) -> Tuple[FrozenSet[int], ...]:
         """Per-op index sets of ALL dependency parents (true flow deps
-        plus write-after-read/write hazards) — the closure relation
-        :meth:`frontiers` enumerates downward-closed sets under. The
-        placement DP enforces exactly this relation, so every frontier
-        it returns is executable (``check_frontier`` accepts it)."""
+        plus write-after-read/write hazards) — the full ordering
+        relation. For frontier enumeration and the placement DP, use
+        :attr:`closure_parent_indices` (equal to this unless an op
+        declares ``downlink_ok``)."""
         return self._parents
+
+    @property
+    def closure_parent_indices(self) -> Tuple[FrozenSet[int], ...]:
+        """The relation :meth:`frontiers` enumerates downward-closed
+        sets under and the placement DP enforces: hazard parents, minus
+        the flow parents of ``downlink_ok`` ops (those inputs may ride
+        the cloud->edge downlink, so the parent need not be
+        edge-resident). Every frontier it admits is executable —
+        :meth:`run` interleaves sides in list order when a frontier is
+        not closed under the full hazard relation."""
+        return self._closure
 
     @property
     def flow_pairs(self) -> Tuple[Tuple[int, int], ...]:
@@ -249,9 +290,11 @@ class OpGraph:
         optimizes against measurement instead of the hand-written
         declarations. ``None`` clears back to the declared costs.
 
-        Edge-capability is a *semantic* declaration (model management
-        must stay in the cloud), not something a dry-run can measure, so
-        the declared flag always survives the override."""
+        Edge-capability and downlink tolerance are *semantic*
+        declarations (model management must stay in the cloud; only a
+        decode op designed for it may consume over the downlink), not
+        something a dry-run can measure, so the declared flags always
+        survive the override."""
         if costs is None:
             self._cost_overrides = {}
             return
@@ -260,7 +303,8 @@ class OpGraph:
             raise ValueError(f"measured costs name unknown ops: {unknown}")
         self._cost_overrides = {
             name: replace(c, name=name,
-                          edge_capable=self.op(name).cost.edge_capable)
+                          edge_capable=self.op(name).cost.edge_capable,
+                          downlink_ok=self.op(name).cost.downlink_ok)
             for name, c in costs.items()}
 
     def init_states(self) -> Dict[str, Any]:
@@ -285,7 +329,7 @@ class OpGraph:
             raise ValueError(f"unknown ops in frontier: {sorted(unknown)}")
         idx = {op.name: i for i, op in enumerate(self.ops)}
         for name in f:
-            for p in self._parents[idx[name]]:
+            for p in self._closure[idx[name]]:
                 if self.ops[p].name not in f:
                     raise ValueError(
                         f"frontier not downward-closed: {name!r} depends on "
@@ -293,11 +337,15 @@ class OpGraph:
         return f
 
     def frontiers(self) -> Iterator[FrozenSet[str]]:
-        """Enumerate every downward-closed cut set (edge-side op set).
-        For a chain these are exactly the ``n+1`` prefixes."""
+        """Enumerate every downward-closed cut set (edge-side op set)
+        under :attr:`closure_parent_indices`. For a chain these are
+        exactly the ``n+1`` prefixes; a graph with downlink-ok ops
+        additionally admits frontiers whose members receive inputs over
+        the cloud->edge downlink (e.g. ``{decode}`` with prefill in the
+        cloud)."""
         n = len(self.ops)
         names = self.names
-        parents = self._parents
+        parents = self._closure
 
         def rec(i: int, cur: set) -> Iterator[FrozenSet[str]]:
             if i == n:
@@ -314,16 +362,28 @@ class OpGraph:
     # -- partitioned execution ---------------------------------------------
     @staticmethod
     def _sig(batch: Batch) -> tuple:
-        return tuple(sorted((k, jnp.shape(v), jnp.result_type(v).name)
-                            for k, v in batch.items()))
+        # channels may carry whole pytrees (a KV cache, a param tree),
+        # not just arrays — the signature is treedef + per-leaf
+        # shape/dtype, which degenerates to the old (shape, dtype) key
+        # for plain array channels.
+        out = []
+        for k in sorted(batch):
+            leaves, treedef = jax.tree_util.tree_flatten(batch[k])
+            out.append((k, str(treedef),
+                        tuple((jnp.shape(l), jnp.result_type(l).name)
+                              for l in leaves)))
+        return tuple(out)
 
     def _op_fn(self, i: int) -> Callable:
         """The per-op compiled step — shared by every segment that contains
         op ``i``, which is what makes frontier migration bitwise-safe. One
-        jit wrapper per op; jax itself specializes per batch signature."""
+        jit wrapper per op; jax itself specializes per batch signature.
+        Host ops (``jit=False``) run their fn directly — they own their
+        compiled executables."""
         fn = self._op_fns.get(i)
         if fn is None:
-            fn = jax.jit(self.ops[i].fn)
+            op = self.ops[i]
+            fn = jax.jit(op.fn) if op.jit else op.fn
             self._op_fns[i] = fn
         return fn
 
@@ -388,17 +448,28 @@ class OpGraph:
 
     def _run_segments(self, states: Dict[str, Any], batch: Batch,
                       segments: Sequence[Tuple[int, ...]],
-                      uplink: Optional[Callable[[Batch], Batch]] = None
+                      uplink: Optional[Callable[[Batch], Batch]] = None,
+                      sides: Optional[Sequence[str]] = None
                       ) -> Tuple[Dict[str, Any], Batch]:
-        for seg_idx, idxs in enumerate(segments):
+        """Execute ``segments`` in order, applying ``uplink`` (the wire
+        codec round-trip) on every *side change*. ``sides`` labels each
+        segment "edge"/"cloud"; without it the historical two-segment
+        rule applies (first segment edge, the rest cloud). The stream
+        source sits on the edge side, so an empty edge segment still
+        crosses the wire entering the cloud — the all-cloud plan's
+        priced raw-event crossing."""
+        if sides is None:
+            sides = ["edge"] + ["cloud"] * (len(segments) - 1)
+        prev_side = "edge"    # where the stream originates
+        for idxs, side in zip(segments, sides):
             if not idxs:
                 continue
-            if seg_idx > 0 and uplink is not None:
-                # entering a non-edge segment crosses the edge->cloud
-                # uplink — whether the batch is edge-segment output or
-                # the raw stream (empty frontier: the all-cloud plan's
-                # priced raw-event crossing). Apply the wire codec.
+            if side != prev_side and uplink is not None:
+                # the batch crosses the edge<->cloud wire (uplink, or —
+                # for downlink-ok consumers — the cloud->edge downlink):
+                # apply the link codec's round-trip.
                 batch = uplink(batch)
+            prev_side = side
             sub = {self.ops[i].name: states[self.ops[i].name] for i in idxs}
             fn = self._segment_fn(tuple(idxs), batch)
             sub, batch = fn(sub, batch)
@@ -413,12 +484,35 @@ class OpGraph:
         form the edge segment, the rest the cloud segment (either may be
         empty); within each segment ops run in graph list order.
         ``uplink`` (optional) transforms the batch dict where it crosses
-        from the edge segment to the cloud segment — the orchestrator
-        passes the SLA-chosen uplink codec's wire round-trip here."""
+        between the sides — the orchestrator passes the SLA-chosen
+        uplink codec's wire round-trip here.
+
+        A frontier that is downward-closed under the *full* hazard
+        relation runs as the historical two segments (edge then cloud —
+        one wire crossing). A frontier admitted only by the relaxed
+        closure (downlink-ok ops with cloud-resident flow parents, e.g.
+        edge-decode under cloud-prefill) cannot be grouped that way
+        without reordering a flow edge, so it executes as maximal
+        same-side runs in graph list order — always a valid topological
+        linearization — and the wire codec applies on every side
+        change, pricing the downlink crossing too."""
         f = self.check_frontier(frontier)
         edge = tuple(i for i, op in enumerate(self.ops) if op.name in f)
-        cloud = tuple(i for i, op in enumerate(self.ops) if op.name not in f)
-        return self._run_segments(states, batch, (edge, cloud), uplink)
+        eset = frozenset(edge)
+        if all(self._parents[i] <= eset for i in edge):
+            cloud = tuple(i for i in range(len(self.ops)) if i not in eset)
+            return self._run_segments(states, batch, (edge, cloud), uplink)
+        segments: List[List[int]] = []
+        sides: List[str] = []
+        for i in range(len(self.ops)):
+            side = "edge" if i in eset else "cloud"
+            if sides and sides[-1] == side:
+                segments[-1].append(i)
+            else:
+                segments.append([i])
+                sides.append(side)
+        return self._run_segments(
+            states, batch, [tuple(s) for s in segments], uplink, sides)
 
     def run_reference(self, states: Dict[str, Any], batch: Batch
                       ) -> Tuple[Dict[str, Any], Batch]:
@@ -451,6 +545,9 @@ class Pipeline(OpGraph):
         n = len(self.ops)
         self._parents = tuple(frozenset(() if i == 0 else (i - 1,))
                               for i in range(n))
+        # prefix cuts only: the linear chain keeps the strict relation
+        # even for downlink-ok ops (a non-prefix edge set has no `cut`).
+        self._closure = self._parents
         self._flow_pairs = tuple((i, i + 1) for i in range(n - 1))
         self.flow_edges = tuple((self.ops[i].name, self.ops[i + 1].name)
                                 for i in range(n - 1))

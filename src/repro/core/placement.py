@@ -5,7 +5,12 @@ Placement of a stream pipeline onto heterogeneous resources is NP-hard
 any feasible assignment the edge-resident op set contains all of its own
 ancestors, because a cloud op feeding an edge op would route a high-rate
 stream back over the constrained link (backhaul — infeasible by the cost
-model). For a linear chain the downward-closed sets are the prefixes, so
+model). Ops declaring ``OperatorCost.downlink_ok`` relax this per
+consumer: their cloud->edge crossing is a priced *downlink* (cloud-
+prefill/edge-decode serving), so closure is taken under
+``OpGraph.closure_parent_indices`` — identical to the full hazard
+relation everywhere else. For a linear chain the downward-closed sets
+are the prefixes, so
 :func:`place` searches all prefix cuts exactly (unchanged from the
 linear IR); for an operator DAG over a :class:`ClusterSpec` there are
 two engines behind :func:`place_frontier`:
@@ -454,7 +459,12 @@ def _dp_tables(graph, spec: ClusterSpec, rate: float):
             bwm[a][b] = ln.bw
             ratm[a][b] = get_codec(ln.codec).ratio
             epbm[a][b] = ln.energy_per_byte
-    haz = graph.hazard_parent_indices
+    # the closure relation: full hazard parents, minus flow parents of
+    # downlink-ok ops (their inputs may ride the cloud->edge downlink —
+    # priced as a ship below, not forbidden by the edge gate). Graphs
+    # without downlink ops have closure == hazard parents.
+    haz = getattr(graph, "closure_parent_indices",
+                  graph.hazard_parent_indices)
     flow_parents: List[List[int]] = [[] for _ in range(n)]
     flow_children: List[List[int]] = [[] for _ in range(n)]
     for i, j in graph.flow_pairs:
@@ -545,9 +555,12 @@ def _dp_pass(t: dict, rate: float, objective: Objective, incumbent: float,
                 if not okj[p]:
                     continue
                 if kinds[p] == "edge":
-                    # hazard-downward closure: an edge-resident op needs
-                    # every hazard parent edge-resident (which also rules
-                    # out cloud->edge backhaul on flow edges)
+                    # closure-downward gate: an edge-resident op needs
+                    # every closure parent edge-resident (which rules out
+                    # cloud->edge backhaul on flow edges — except into
+                    # downlink-ok consumers, whose flow parents are not
+                    # closure parents and whose downlink crossing is
+                    # priced as a normal ship below)
                     if any(kinds[assign_t[i]] != "edge" for i in hazj):
                         continue
                 nu = utild.get(p, 0.0) + utj[p]

@@ -195,3 +195,47 @@ def from_compiled(compiled, cfg, shape, chips: int,
         chips=chips,
         model_flops_global=model_flops(cfg, shape),
     )
+
+
+def dl_operator_cost(name: str, cfg, *, phase: str, batch: int,
+                     seq_len: int, new_tokens: int = 1,
+                     param_bytes: float = 0.0, state_bytes: float = 0.0,
+                     out_bytes_per_event: float = 0.0,
+                     edge_capable: bool = True, downlink_ok: bool = False):
+    """Declared :class:`~repro.core.costmodel.OperatorCost` for a DL op
+    from the roofline flops rules — the same 6ND/2ND arithmetic
+    :func:`model_flops` grounds the dry-run report with, so a declared
+    train/prefill/decode op and the §Roofline analysis speak one
+    language instead of hand-guessed constants. An *event* is one
+    request/sequence; ``phase`` is ``"train"`` (6ND over ``seq_len``
+    tokens), ``"prefill"`` (2ND over the prompt), or ``"decode"``
+    (2N per generated token, ``new_tokens`` of them).
+
+    ``bytes_per_event`` models the weight-stream traffic: parameters are
+    read once per step and amortize over the ``batch`` sequences sharing
+    it — except decode, which re-reads the weights for every generated
+    token (the classic serving memory wall). Where a backend supports
+    compiled cost analysis, :func:`repro.core.selftune.
+    measure_operator_costs` replaces these numbers with measurement; the
+    semantic flags (``edge_capable``, ``downlink_ok``) and the
+    ``state_bytes`` residency declaration are what placement needs even
+    then."""
+    from repro.core.costmodel import OperatorCost
+    if phase not in ("train", "prefill", "decode"):
+        raise ValueError(f"phase {phase!r} not in ('train', 'prefill', "
+                         "'decode')")
+    n_active = float(cfg.param_counts()["active"])
+    b = max(int(batch), 1)
+    if phase == "train":
+        flops = 6.0 * n_active * seq_len
+        hbm = 3.0 * param_bytes / b          # fwd read + grad + update
+    elif phase == "prefill":
+        flops = 2.0 * n_active * seq_len
+        hbm = param_bytes / b
+    else:
+        flops = 2.0 * n_active * new_tokens
+        hbm = param_bytes * new_tokens / b   # weight re-read per token
+    return OperatorCost(name, flops_per_event=flops, bytes_per_event=hbm,
+                        out_bytes_per_event=out_bytes_per_event,
+                        state_bytes=state_bytes, edge_capable=edge_capable,
+                        downlink_ok=downlink_ok)

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,10 +36,14 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 4,
                  max_len: int = 256, impl: str = "chunked",
                  sampling: SamplingParams = SamplingParams(greedy=True),
-                 seed: int = 0):
+                 seed: int = 0,
+                 clock: Callable[[], float] = time.perf_counter):
         self.cfg, self.params = cfg, params
         self.batch_size, self.max_len = batch_size, max_len
         self.impl, self.sampling = impl, sampling
+        # injectable so serving metrics are deterministic under a sim
+        # clock (tests advance it by hand); default unchanged wall clock
+        self._clock = clock
         self.rng = jax.random.PRNGKey(seed)
         self._decode = jax.jit(self._decode_fn, donate_argnums=(1,))
         self._prefill = jax.jit(self._prefill_fn)
@@ -85,18 +89,18 @@ class ServeEngine:
         if cfg.family == "encdec":
             batch["frames"] = jnp.zeros((B, S, cfg.frontend_dim), jnp.float32)
 
-        t0 = time.perf_counter()
+        t0 = self._clock()
         logits, caches = self._prefill(self.params, batch)
         self.rng, sub = jax.random.split(self.rng)
         tok = sample(logits[:, 0, :cfg.vocab_size], sub, self.sampling)
         jax.block_until_ready(tok)
-        self.metrics["prefill_s"] += time.perf_counter() - t0
+        self.metrics["prefill_s"] += self._clock() - t0
         self.metrics["prefill_tokens"] += B * S
         for i, r in enumerate(wave):
             r.out_tokens.append(int(tok[i]))
 
         steps = max(r.max_new_tokens for r in wave) - 1
-        t1 = time.perf_counter()
+        t1 = self._clock()
         for _ in range(steps):
             tok, caches, self.rng = self._decode(
                 self.params, caches, tok[:, None], self.rng)
@@ -104,7 +108,7 @@ class ServeEngine:
                 if len(r.out_tokens) < r.max_new_tokens:
                     r.out_tokens.append(int(tok[i]))
         jax.block_until_ready(tok)
-        self.metrics["decode_s"] += time.perf_counter() - t1
+        self.metrics["decode_s"] += self._clock() - t1
         self.metrics["decode_tokens"] += B * steps
         for r in wave:
             r.done = True

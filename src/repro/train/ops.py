@@ -1,0 +1,104 @@
+"""Training as a placement-priced operator: :func:`dl_train_op` wraps
+the :func:`~repro.train.train_step.make_train_step` factory as a
+pipeline :class:`~repro.core.pipeline.Op` whose state is the
+``(params, opt_state, step)`` triple and whose
+:class:`~repro.core.costmodel.OperatorCost` comes from the roofline 6ND
+rule (:func:`repro.launch.roofline.dl_operator_cost`) — refined to the
+compiled artifact's numbers by
+:func:`repro.core.selftune.measure_operator_costs` where the backend
+supports cost analysis. An assigned zoo architecture is then placed by
+the frontier DP like any other operator: ``state_bytes`` (the full
+param + optimizer pytree) prices it against ``mem_cap``, and
+``edge_capable=False`` (the default, S2CE's "full DL training is a
+cloud concern") anchors it on a pod.
+
+The op fn is the *unmodified* train step applied to the channel env —
+under the identity codec the pipeline-wrapped step is numerically
+identical to calling the standalone ``train_step`` (the differential
+contract in the tests).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import OperatorCost
+from repro.core.pipeline import Op
+from repro.launch.roofline import dl_operator_cost
+from repro.models import model_zoo as zoo
+from repro.train.optim import Optimizer
+from repro.train.train_step import make_train_step
+
+
+def _shape_tree_bytes(tree) -> float:
+    return float(sum(
+        int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def train_state_bytes(cfg, optimizer: Optimizer) -> float:
+    """Resident bytes of the train op's state (params + optimizer
+    moments), from shapes only — never materialized here."""
+    pshapes = zoo.param_shapes(cfg)
+    params = jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, l.dtype), pshapes)
+    opt_shapes = jax.eval_shape(optimizer.init, params)
+    return _shape_tree_bytes(pshapes) + _shape_tree_bytes(opt_shapes)
+
+
+def dl_train_op(cfg, optimizer: Optimizer, *, batch_size: int,
+                seq_len: int, name: str = "dl_train",
+                impl: str = "chunked", seed: int = 0,
+                clip_norm: float = 1.0,
+                microbatches: Optional[int] = None,
+                grad_compression: Optional[str] = None,
+                edge_capable: bool = False,
+                cost: Optional[OperatorCost] = None,
+                extra_reads: Tuple[str, ...] = ()) -> Op:
+    """The zoo train step as a pipeline op.
+
+    * state: ``(params, opt_state, step)`` — initialized from
+      ``zoo.init_params(cfg, seed)`` / ``optimizer.init``;
+    * channels: reads ``("tokens",)`` (plus family extras /
+      ``extra_reads``), writes per-step ``("loss", "grad_norm")``;
+    * cost: roofline-declared (6ND per sequence event, weight-stream
+      HBM traffic, full state residency) unless ``cost`` is given.
+    """
+    extras = tuple(extra_reads)
+    if cfg.family == "vlm" and "patches" not in extras:
+        extras += ("patches",)
+    if cfg.family == "encdec" and "frames" not in extras:
+        extras += ("frames",)
+    train_step = make_train_step(
+        cfg, optimizer, impl=impl, clip_norm=clip_norm,
+        microbatches=microbatches, grad_compression=grad_compression)
+    model_keys = ("tokens",) + extras
+
+    def fn(state, batch):
+        params, opt_state, step = state
+        model_in = {k: batch[k] for k in model_keys if k in batch}
+        params, opt_state, step, metrics = train_step(
+            params, opt_state, step, model_in)
+        out = {"loss": metrics["loss"], "grad_norm": metrics["grad_norm"]}
+        return (params, opt_state, step), out
+
+    def init():
+        params = zoo.init_params(cfg, seed)
+        return params, optimizer.init(params), jnp.zeros((), jnp.int32)
+
+    if cost is None:
+        pb = _shape_tree_bytes(zoo.param_shapes(cfg))
+        cost = dl_operator_cost(
+            name, cfg, phase="train", batch=batch_size, seq_len=seq_len,
+            param_bytes=pb, out_bytes_per_event=8.0,
+            state_bytes=train_state_bytes(cfg, optimizer),
+            edge_capable=edge_capable)
+    else:
+        from dataclasses import replace
+        cost = replace(cost, name=name)
+    return Op(name, fn, cost, init=init,
+              reads=model_keys, writes=("loss", "grad_norm"))

@@ -493,3 +493,43 @@ def test_ledger_drop_pool_scrubs_only_touching_bookings():
     led.reservations["t2"] = Reservation(pool_frac={"edge": 0.1})
     with pytest.raises(ValueError, match="drop_pool"):
         led.set_spec(two_pool_spec().without_pool("edge"))
+
+
+def test_bandwidth_probe_ewma_rewrites_spec_link():
+    """``observe_bandwidth`` mirrors the latency probe: EWMA over
+    samples, ``Link.bw`` rewritten in the versioned spec, LINK_UPDATE
+    announced only beyond the shared dead band."""
+    d = MembershipDirectory(two_pool_spec(bw=2e6, latency=20e-3),
+                            ewma_alpha=0.5, latency_tol=0.2)
+    sub = d.subscribe()
+    # one big sample: EWMA moves halfway, beyond the 20% dead band
+    ev = d.observe_bandwidth("edge", "cloud", 6e6, now=1)
+    assert ev is not None and ev.kind == LINK_UPDATE
+    assert ev.subject == "edge->cloud"
+    assert "bw" in ev.detail
+    assert d.spec.link("edge", "cloud").bw == pytest.approx(4e6)
+    assert d.bandwidth_estimate("edge", "cloud") == pytest.approx(4e6)
+    # the latency declared on the link is untouched by bandwidth probes
+    assert d.spec.link("edge", "cloud").latency == pytest.approx(20e-3)
+    # samples at the current estimate: spec stays fresh, no announcement
+    v = d.version
+    assert d.observe_bandwidth("edge", "cloud", 4e6, now=2) is None
+    assert d.version > v            # the estimate still versions the spec
+    assert [e.kind for e in sub.poll()] == [LINK_UPDATE]
+    with pytest.raises(ValueError, match="unknown pool"):
+        d.observe_bandwidth("edge", "nope", 1e6)
+    with pytest.raises(ValueError, match="non-positive sample"):
+        d.observe_bandwidth("edge", "cloud", 0.0)
+
+
+def test_bandwidth_and_latency_probes_share_a_link_independently():
+    d = MembershipDirectory(two_pool_spec(bw=2e6, latency=20e-3),
+                            ewma_alpha=0.5, latency_tol=0.2)
+    d.observe_bandwidth("edge", "cloud", 6e6, now=1)
+    d.observe_latency("edge", "cloud", 60e-3, now=2)
+    ln = d.spec.link("edge", "cloud")
+    assert ln.bw == pytest.approx(4e6)
+    assert ln.latency == pytest.approx(40e-3)
+    # a dead-banded bandwidth wiggle never clobbers the latency estimate
+    assert d.observe_bandwidth("edge", "cloud", 4.1e6, now=3) is None
+    assert d.spec.link("edge", "cloud").latency == pytest.approx(40e-3)

@@ -1,0 +1,145 @@
+"""ServeEngine behavior on CPU: wave batching over more requests than
+slots, the int8 KV-cache path, deterministic latency metrics under an
+injected sim clock, and the sampling primitives the decode loop uses."""
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models import model_zoo as zoo
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.sampling import SamplingParams, sample
+
+CFG = get_config("qwen2-1.5b", smoke=True)
+PARAMS = zoo.init_params(CFG, 0)
+
+
+def make_requests(n, new_tokens):
+    return [Request(i, np.arange(1, 6, dtype=np.int32) + i,
+                    max_new_tokens=new_tokens[i]) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# wave batching
+# ---------------------------------------------------------------------------
+
+def test_wave_batching_serves_all_requests_to_their_own_lengths():
+    eng = ServeEngine(CFG, PARAMS, batch_size=2, max_len=32)
+    new_tokens = [3, 5, 4, 2, 6]
+    reqs = make_requests(5, new_tokens)
+    done = eng.run(reqs)
+    assert len(done) == 5
+    for r, want in zip(done, new_tokens):
+        assert r.done
+        assert len(r.out_tokens) == want
+        assert all(isinstance(t, int) for t in r.out_tokens)
+    # 3 waves of prompts (2+2+1), left-padded to the wave max S=5
+    assert eng.metrics["prefill_tokens"] == 5 * 5
+
+
+def test_wave_batching_matches_single_request_runs_greedy():
+    """Greedy decoding is batch-invariant here: serving a request in a
+    shared wave must emit the same tokens as serving it alone (waves are
+    padded to a uniform stride, so the cache layout is identical)."""
+    reqs = make_requests(2, [4, 4])
+    eng = ServeEngine(CFG, PARAMS, batch_size=2, max_len=32)
+    eng.run(reqs)
+    for i in range(2):
+        solo = make_requests(2, [4, 4])[i]
+        solo_eng = ServeEngine(CFG, PARAMS, batch_size=2, max_len=32)
+        solo_eng.run([solo])
+        assert solo.out_tokens == reqs[i].out_tokens
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache
+# ---------------------------------------------------------------------------
+
+def test_int8_kv_cache_path_serves_and_stays_close_to_bf16():
+    cfg8 = replace(CFG, kv_cache_dtype="int8")
+    reqs8 = make_requests(2, [4, 4])
+    ServeEngine(cfg8, PARAMS, batch_size=2, max_len=32).run(reqs8)
+    for r in reqs8:
+        assert r.done and len(r.out_tokens) == 4
+    caches = zoo.init_caches(cfg8, 2, 32)
+    dtypes = {l.dtype for l in jax.tree_util.tree_leaves(caches)
+              if l.ndim >= 3}
+    assert jnp.dtype(jnp.int8) in dtypes
+
+
+# ---------------------------------------------------------------------------
+# injected clock -> deterministic metrics
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self, tick=0.5):
+        self.t, self.tick = 0.0, tick
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+
+def test_injected_clock_makes_latency_metrics_deterministic():
+    eng = ServeEngine(CFG, PARAMS, batch_size=2, max_len=32,
+                      clock=FakeClock(tick=0.5))
+    eng.run(make_requests(2, [4, 4]))
+    # each wave reads the clock twice per phase: both spans are one tick
+    assert eng.metrics["prefill_s"] == pytest.approx(0.5)
+    assert eng.metrics["decode_s"] == pytest.approx(0.5)
+    tp = eng.throughput()
+    assert tp["prefill_tok_per_s"] == pytest.approx(2 * 5 / 0.5)
+    assert tp["decode_tok_per_s"] == pytest.approx(2 * 3 / 0.5)
+
+
+def test_throughput_is_safe_before_any_traffic():
+    eng = ServeEngine(CFG, PARAMS, batch_size=2, max_len=32)
+    tp = eng.throughput()
+    assert tp["prefill_tok_per_s"] == 0.0
+    assert tp["decode_tok_per_s"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# sampling primitives
+# ---------------------------------------------------------------------------
+
+def test_sample_greedy_is_argmax():
+    logits = jnp.asarray([[0.1, 2.0, -1.0], [3.0, 0.0, 2.9]])
+    tok = sample(logits, jax.random.PRNGKey(0), SamplingParams(greedy=True))
+    assert tok.tolist() == [1, 0]
+
+
+def test_sample_top_k_masks_outside_top_k():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    p = SamplingParams(temperature=1.0, top_k=3)
+    topk = set()
+    for row in np.asarray(logits):
+        topk.update((tuple(np.argsort(row)[-3:])))
+    for seed in range(8):
+        tok = sample(logits, jax.random.PRNGKey(seed), p)
+        for b in range(4):
+            top3 = np.argsort(np.asarray(logits)[b])[-3:]
+            assert int(tok[b]) in top3
+
+
+def test_sample_top_p_keeps_nucleus_only():
+    # one dominant logit -> tiny nucleus -> always that token
+    logits = jnp.asarray([[10.0, 0.0, 0.0, 0.0]])
+    p = SamplingParams(temperature=1.0, top_p=0.5)
+    for seed in range(8):
+        tok = sample(logits, jax.random.PRNGKey(seed), p)
+        assert int(tok[0]) == 0
+
+
+def test_sample_temperature_sharpens():
+    logits = jnp.asarray([[1.0, 0.0, -1.0]])
+    cold = SamplingParams(temperature=1e-3)
+    for seed in range(8):
+        tok = sample(logits, jax.random.PRNGKey(seed), cold)
+        assert int(tok[0]) == 0
